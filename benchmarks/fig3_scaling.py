@@ -1,0 +1,58 @@
+"""Figures 3/4: scaling of the threshold algorithms with N and with T.
+
+Fig 3: time vs N at T = N/2 (normalised to N=32, as in the paper).
+Fig 4: time vs T at N = 64 on one bitmap set.
+Times are wall-clock over jitted calls on the synthetic 5.3 datasets.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.threshold import threshold
+from repro.data.paper_datasets import synthetic_dataset
+
+ALGOS = ("scancount", "looped", "ssum", "treeadd", "csvckt", "fused")
+
+
+def _time(fn, reps=3):
+    fn()  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+def run():
+    out = []
+    packed, r, _ = synthetic_dataset("clustered", "dense", n_bitmaps=128, card=4000, seed=1111)
+    full = jnp.asarray(packed)
+    # Fig 3: N scaling at T=N/2
+    base: dict = {}
+    for n in (8, 16, 32, 64, 128):
+        bm = full[:n]
+        for alg in ALGOS:
+            t = n // 2
+            if alg == "looped" and n * t > 4000:
+                continue  # LOOPED is an O(NT)-op small-T algorithm (paper 4.5)
+            dt = _time(lambda: threshold(bm, t, alg).block_until_ready())
+            if n == 32:
+                base[alg] = dt
+            out.append((f"fig3_{alg}_N{n}_us", dt * 1e6, f"T={t}"))
+    # Fig 4: T scaling at N=64
+    bm = full[:64]
+    for t in (2, 3, 8, 16, 32, 48, 61, 63):
+        for alg in ALGOS:
+            if alg == "looped" and 64 * t > 4000:
+                continue
+            dt = _time(lambda: threshold(bm, t, alg).block_until_ready())
+            out.append((f"fig4_{alg}_T{t}_us", dt * 1e6, "N=64"))
+    return out
+
+
+if __name__ == "__main__":
+    for name, val, extra in run():
+        print(f"{name},{val:.1f},{extra}")

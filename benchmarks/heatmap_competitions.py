@@ -1,0 +1,95 @@
+"""Paper 5.4/5.8: SMALL-COMPETITIONS heatmap + Appendix C suboptimality.
+
+Runs the paper's competition protocol: for each (N, T) pair of the
+SMALL-COMPETITIONS schedule, race the algorithms on similarity queries and
+rank them.  Produces (a) per-algorithm win / within-50% / terrible
+percentages (the paper's heat-map aggregates) and (b) mean suboptimality
+(Appendix C).  CPU wall-clock; the *relative* conclusions are what the
+paper reports (RBMRG/adders robust, LOOPED wins small T, pruning wins
+T ~ N on sparse data).
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import listalgos as LA
+from repro.core.blockrle import classify_tiles, rbmrg_block_threshold
+from repro.core.threshold import threshold
+from repro.data.paper_datasets import similarity_query, synthetic_dataset
+
+
+def small_competitions():
+    """The paper's (N, T) schedule: doubling N; T' and N+2-T' ladders."""
+    pairs = []
+    for n in (4, 8, 16, 32):
+        ts = set()
+        tp = 3
+        while tp <= n // 2 + 1:
+            ts.add(tp)
+            ts.add(n + 2 - tp)
+            tp = (3 * tp) // 2
+        for t in sorted(x for x in ts if 2 <= x <= n - 1):
+            pairs.append((n, t))
+    return pairs
+
+
+def _time(fn, reps=2):
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+def run():
+    packed, r, lists = synthetic_dataset("clustered", "dense", n_bitmaps=64,
+                                         card=3000, seed=1111)
+    stats_cache = {}
+    wins: dict[str, int] = {}
+    ok50: dict[str, int] = {}
+    terrible: dict[str, int] = {}
+    subopt: dict[str, list] = {}
+    n_comp = 0
+    for n, t in small_competitions():
+        sel, rid = similarity_query(lists, n, seed=n * 131 + t)
+        bm = jnp.asarray(packed[sel])
+        sel_lists = [lists[i] for i in sel]
+        key = tuple(sel)
+        if key not in stats_cache:
+            stats_cache[key] = classify_tiles(bm)
+        stats = stats_cache[key]
+        times = {}
+        for alg in ("scancount", "ssum", "csvckt", "fused"):
+            times[alg] = _time(lambda a=alg: threshold(bm, t, a).block_until_ready())
+        if n * t <= 4000:
+            times["looped"] = _time(lambda: threshold(bm, t, "looped").block_until_ready())
+        times["rbmrg_block"] = _time(lambda: rbmrg_block_threshold(bm, t, stats=stats))
+        times["dsk"] = _time(lambda: LA.dsk(sel_lists, t, r))
+        times["w2cti"] = _time(lambda: LA.w2cti(sel_lists, t, r))
+        best = min(times.values())
+        n_comp += 1
+        for alg, dt in times.items():
+            wins[alg] = wins.get(alg, 0) + (dt == best)
+            ok50[alg] = ok50.get(alg, 0) + (dt <= 1.5 * best)
+            terrible[alg] = terrible.get(alg, 0) + (dt >= 10 * best)
+            subopt.setdefault(alg, []).append(dt / best - 1.0)
+    out = []
+    for alg in sorted(subopt, key=lambda a: float(np.mean(subopt[a]))):
+        out.append(
+            (
+                f"heatmap_{alg}_mean_subopt",
+                float(np.mean(subopt[alg])),
+                f"wins={100 * wins[alg] / n_comp:.0f}% within50={100 * ok50[alg] / n_comp:.0f}% "
+                f"terrible={100 * terrible[alg] / n_comp:.0f}%",
+            )
+        )
+    out.append(("heatmap_competitions", n_comp, "SMALL-COMPETITIONS pairs"))
+    return out
+
+
+if __name__ == "__main__":
+    for name, val, extra in run():
+        print(f"{name},{val},{extra}")

@@ -1,0 +1,68 @@
+"""Kernel-level comparison: fused Pallas threshold vs composed-jnp circuit
+vs SCANCOUNT oracle.
+
+On this CPU container the Pallas kernel runs in interpret mode (Python), so
+wall-clock is meaningless for it; what we CAN measure and model:
+  * wall time of the jnp circuit (XLA-fused on CPU) vs scancount,
+  * the analytic HBM-traffic model for TPU: composed ops write every
+    intermediate bit-plane (~(1 read + 1 write) x live plane per gate level)
+    while the fused kernel streams N planes in and 1 out,
+  * the VMEM working set implied by the chosen BlockSpec.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import circuits as C
+from repro.core.threshold import threshold
+from repro.kernels.threshold_ssum import pick_block_words
+
+
+def _time(fn, reps=5):
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+def hbm_model(n: int, t: int, n_words: int) -> dict:
+    """Bytes moved to/from HBM per threshold query (TPU model)."""
+    gates = C.build_threshold_circuit(n, t, "ssum").gate_count()
+    word_bytes = 4
+    fused = (n + 1) * n_words * word_bytes  # stream in N planes, write 1
+    # composed jnp: every gate reads 2 planes and writes 1 (upper bound; XLA
+    # fusion recovers some, but bit-plane intermediates exceed cache at this r)
+    composed = (3 * gates) * n_words * word_bytes
+    return {"fused_bytes": fused, "composed_bytes": composed, "ratio": composed / fused}
+
+
+def run():
+    out = []
+    rng = np.random.default_rng(0)
+    for n, nw in [(32, 1 << 16), (128, 1 << 16), (256, 1 << 14)]:
+        bm = jnp.asarray(rng.integers(0, 2**32, (n, nw), dtype=np.uint32))
+        t = n // 2
+        for alg in ("scancount", "ssum", "looped", "csvckt"):
+            if alg == "looped" and n * t > 4000:
+                continue
+            dt = _time(lambda: threshold(bm, t, alg).block_until_ready())
+            out.append((f"kernel_N{n}_{alg}_us", dt * 1e6, f"r={nw * 32}"))
+        m = hbm_model(n, t, nw)
+        out.append(
+            (f"kernel_N{n}_hbm_ratio", m["ratio"],
+             f"fused={m['fused_bytes'] / 2**20:.1f}MiB composed={m['composed_bytes'] / 2**20:.0f}MiB")
+        )
+        bw = pick_block_words(n, nw)
+        vmem = 2 * n * bw * 4
+        out.append((f"kernel_N{n}_block_words", bw, f"working_set={vmem / 2**20:.1f}MiB"))
+    return out
+
+
+if __name__ == "__main__":
+    for name, val, extra in run():
+        print(f"{name},{val:.2f},{extra}")

@@ -1,0 +1,122 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Per (arch x shape x mesh) cell:
+    compute term    = HLO_FLOPs_per_device / peak_FLOPs          (197 TF/s bf16)
+    memory term     = HLO_bytes_per_device / HBM_bw              (819 GB/s)
+    collective term = collective_bytes_per_device / link_bw      (50 GB/s/link)
+
+The dry-run compiles a *partitioned* program, so cost_analysis numbers are
+already per-device; dividing by per-chip peaks is equivalent to the global
+form FLOPs / (chips x peak).  MODEL_FLOPS uses the 6ND / 2ND convention on
+active params.  Caveat (documented in EXPERIMENTS.md): the CPU backend
+upcasts bf16 dots to f32, so 'bytes accessed' overstates TPU HBM traffic by
+up to 2x on matmul-heavy cells; FLOPs are dtype-independent.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12  # v5e bf16
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_PCACHE: dict[str, int] = {}
+
+
+def model_flops(arch: str, shape: str, n_devices: int) -> float:
+    from repro.configs import get_config, shape_cells
+
+    cfg = get_config(arch)
+    if arch not in _PCACHE:
+        _PCACHE[arch] = cfg.active_param_count()
+    n_active = _PCACHE[arch]
+    cell = shape_cells()[shape]
+    b, s, kind = cell["global_batch"], cell["seq_len"], cell["kind"]
+    if kind == "train":
+        tokens, mult = b * s, 6
+    elif kind == "prefill":
+        tokens, mult = b * s, 2
+    else:  # decode: one new token per sequence
+        tokens, mult = b, 2
+    return mult * n_active * tokens / n_devices
+
+
+def analyze(artifact: dict) -> dict | None:
+    if artifact.get("status") != "OK":
+        return None
+    la = artifact.get("loop_aware")
+    if la:  # loop-aware accounting (scan bodies x trip counts) -- preferred
+        flops = la["dot_flops"]
+        byts = la["hbm_traffic_proxy"]
+        coll = la["collective_total"]
+    else:  # raw cost_analysis (undercounts while-loop bodies)
+        flops = artifact["cost_analysis"].get("flops", 0.0)
+        byts = artifact["cost_analysis"].get("bytes accessed", 0.0)
+        coll = artifact["collectives"]["total_bytes"]
+    terms = {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": byts / HBM_BW,
+        "collective_s": coll / LINK_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    step_s = max(terms.values())
+    mf = model_flops(artifact["arch"], artifact["shape"], artifact["n_devices"])
+    return {
+        "arch": artifact["arch"],
+        "shape": artifact["shape"],
+        "mesh": artifact["mesh"],
+        **{k: round(v * 1e3, 3) for k, v in terms.items()},  # ms
+        "dominant": dominant.replace("_s", ""),
+        "model_flops_per_dev": mf,
+        "useful_flops_ratio": round(mf / flops, 3) if flops else 0.0,
+        "roofline_fraction": round((mf / PEAK_FLOPS) / step_s, 3) if step_s else 0.0,
+        "hlo_flops": flops,
+        "hlo_bytes": byts,
+        "coll_bytes": coll,
+    }
+
+
+def run(art_dir: str = "artifacts/dryrun"):
+    out = []
+    rows = []
+    for f in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        rec = analyze(json.load(open(f)))
+        if rec:
+            rows.append(rec)
+    for r in rows:
+        tag = f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}"
+        out.append(
+            (
+                tag,
+                max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e3,
+                f"dom={r['dominant']} frac={r['roofline_fraction']} "
+                f"useful={r['useful_flops_ratio']}",
+            )
+        )
+    return out, rows
+
+
+def write_markdown(rows, path="artifacts/roofline.md"):
+    hdr = (
+        "| arch | shape | mesh | compute ms | memory ms | collective ms | dominant "
+        "| MODEL/HLO flops | roofline frac |\n|---|---|---|---|---|---|---|---|---|\n"
+    )
+    lines = [
+        f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['compute_s']} | {r['memory_s']} "
+        f"| {r['collective_s']} | {r['dominant']} | {r['useful_flops_ratio']} "
+        f"| {r['roofline_fraction']} |"
+        for r in rows
+    ]
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(hdr + "\n".join(lines) + "\n")
+    return path
+
+
+if __name__ == "__main__":
+    res, rows = run()
+    for name, val, extra in res:
+        print(f"{name},{val:.3f},{extra}")
+    print("wrote", write_markdown(rows))

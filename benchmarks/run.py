@@ -1,0 +1,72 @@
+"""Benchmark driver: one section per paper table/figure.
+
+Prints ``name,value,derived`` CSV lines.  Sections:
+  table5   -- row scan vs bitmap index (paper Table 5)
+  table7   -- circuit gate counts vs Tables 6/7/8 (paper-faithfulness check)
+  fig3     -- scaling with N and T (paper Figs 3/4)
+  table10  -- workload ranking across algorithm families (paper 5.9)
+  heatmap  -- SMALL-COMPETITIONS win/terrible rates (paper 5.8, App. C)
+  weighted -- weighted thresholds: replication vs binary decomposition
+  kernel   -- fused Pallas kernel traffic model + jnp wall-times
+  roofline -- three-term roofline per dry-run cell (deliverable g; requires
+              artifacts/dryrun from ``python -m repro.launch.dryrun``)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    sections = sys.argv[1:] or ["table5", "table7", "fig3", "table10", "heatmap", "kernel", "weighted", "roofline"]
+    failures = 0
+    for section in sections:
+        print(f"# --- {section} ---")
+        try:
+            if section == "table5":
+                from benchmarks import table5_rowscan as mod
+
+                rows = mod.run()
+            elif section == "table7":
+                from benchmarks import table7_gates as mod
+
+                rows = mod.run()
+            elif section == "fig3":
+                from benchmarks import fig3_scaling as mod
+
+                rows = mod.run()
+            elif section == "table10":
+                from benchmarks import table10_workload as mod
+
+                rows = mod.run()
+            elif section == "kernel":
+                from benchmarks import kernel_bench as mod
+
+                rows = mod.run()
+            elif section == "heatmap":
+                from benchmarks import heatmap_competitions as mod
+
+                rows = mod.run()
+            elif section == "weighted":
+                from benchmarks import weighted_bench as mod
+
+                rows = mod.run()
+            elif section == "roofline":
+                from benchmarks import roofline as mod
+
+                rows, table = mod.run()
+                if table:
+                    print(f"# roofline table -> {mod.write_markdown(table)}")
+            else:
+                raise ValueError(f"unknown section {section}")
+            for name, val, extra in rows:
+                print(f"{name},{val if isinstance(val, int) else round(float(val), 3)},{extra}")
+        except Exception:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Table 10 / Figs 62-64: workload comparison across algorithm families.
+
+A workload of similarity queries over the 5.3 synthetic datasets (uniform /
+clustered x dense / moderate), run through: the bitmap circuit algorithms
+(jnp + fused kernel), SCANCOUNT, the block-RLE RBMRG adaptation, and the
+host-side integer-list competitors (WHEAP / MGOPT / WMGSK / DSK / W2CTI /
+WSORT).  Reports total normalised time per algorithm (paper 5.9: each
+dataset's fastest algorithm = 1.0) plus RBMRG's pruned work fraction.
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import listalgos as LA
+from repro.core.blockrle import classify_tiles, rbmrg_block_threshold
+from repro.core.threshold import threshold
+from repro.data.paper_datasets import similarity_query, synthetic_dataset
+
+DATASETS = [
+    ("uniform", "dense"),
+    ("clustered", "dense"),
+    ("uniform", "moderate"),
+    ("clustered", "moderate"),
+]
+N, T = 32, 16
+
+
+def _time(fn, reps=3):
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+def run():
+    out = []
+    totals: dict[str, float] = {}
+    for kind, dens in DATASETS:
+        packed, r, lists = synthetic_dataset(kind, dens, n_bitmaps=64, card=3000, seed=1111)
+        sel, rid = similarity_query(lists, N, seed=7)
+        bm = jnp.asarray(packed[sel])
+        sel_lists = [lists[i] for i in sel]
+        stats = classify_tiles(bm)
+        times = {}
+        for alg in ("scancount", "looped", "ssum", "csvckt", "fused"):
+            times[alg] = _time(lambda: threshold(bm, T, alg).block_until_ready())
+        times["rbmrg_block"] = _time(lambda: rbmrg_block_threshold(bm, T, stats=stats))
+        for name, fn in [
+            ("wheap", LA.wheap), ("mgopt", LA.mgopt), ("wmgsk", LA.wmgsk),
+            ("dsk", LA.dsk), ("w2cti", LA.w2cti), ("wsort", LA.wsort),
+        ]:
+            times[name] = _time(lambda fn=fn: fn(sel_lists, T, r))
+        best = min(times.values())
+        tag = f"{kind[:4]}_{dens[:3]}"
+        for alg, dt in sorted(times.items(), key=lambda kv: kv[1]):
+            norm = dt / best
+            totals[alg] = totals.get(alg, 0.0) + norm
+            out.append((f"table10_{tag}_{alg}", dt * 1e6, f"norm={norm:.2f}"))
+        _, info = rbmrg_block_threshold(bm, T, stats=stats)
+        out.append(
+            (f"table10_{tag}_rbmrg_work_fraction", info["work_fraction"] * 100, "% of words")
+        )
+    for alg, tot in sorted(totals.items(), key=lambda kv: kv[1]):
+        out.append((f"table10_total_norm_{alg}", tot, f"ideal={len(DATASETS)}"))
+    return out
+
+
+if __name__ == "__main__":
+    for name, val, extra in run():
+        print(f"{name},{val:.2f},{extra}")

@@ -1,0 +1,57 @@
+"""Quickstart: threshold and symmetric queries over bitmaps.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+The paper's motivating example: stores x products.  Which products are on
+sale in at least 2 stores?  In exactly 3?  In 2 to 10?  All answers are
+bitmaps, so they compose with further index operations.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    cardinality,
+    exactly,
+    interval,
+    pack,
+    plan_threshold,
+    threshold,
+    to_positions_np,
+    unpack,
+)
+
+N_STORES, N_PRODUCTS = 12, 10_000
+rng = np.random.default_rng(0)
+
+# each store's "on sale" set as one bitmap row
+on_sale = rng.random((N_STORES, N_PRODUCTS)) < 0.15
+bitmaps = pack(jnp.asarray(on_sale))
+print(f"{N_STORES} stores x {N_PRODUCTS} products, "
+      f"cardinalities: {np.asarray(cardinality(bitmaps))[:6]}...")
+
+# threshold: on sale in >= 2 stores (theta(2, .)), via the fused kernel
+hot = threshold(bitmaps, 2, algorithm="fused")
+print(f"on sale in >=2 stores : {int(cardinality(hot)):6d} products")
+
+# the planner picks the paper-recommended algorithm from (N, T, stats)
+plan = plan_threshold(N_STORES, 2)
+print(f"planner says          : {plan.algorithm} ({plan.rationale})")
+
+# delta function: exactly 3 stores
+just3 = exactly(bitmaps, 3, r=N_PRODUCTS)
+print(f"in exactly 3 stores   : {int(cardinality(just3)):6d}")
+
+# interval: the paper's "2 to 10 stores" example
+mid = interval(bitmaps, 2, 10, r=N_PRODUCTS)
+print(f"in 2..10 stores       : {int(cardinality(mid)):6d}")
+
+# results are bitmaps: compose with a further AND (e.g. "and in store 0")
+also_store0 = jnp.bitwise_and(hot, bitmaps[0])
+print(f">=2 stores AND store 0: {int(cardinality(also_store0)):6d}")
+
+# verify against per-position counts
+counts = on_sale.sum(0)
+assert (np.asarray(unpack(hot, N_PRODUCTS)) == (counts >= 2)).all()
+assert (np.asarray(unpack(just3, N_PRODUCTS)) == (counts == 3)).all()
+print("verified against position counts - OK")
+print("first few >=2-store products:", to_positions_np(hot)[:8])

@@ -1,0 +1,126 @@
+"""Checkpointing: sharded-logical npz + manifest, atomic, resumable, elastic.
+
+Layout per step:
+    <dir>/step_000123.tmp/   (written)  ->  <dir>/step_000123/  (renamed)
+        arrays.npz           flattened {path: array} of the state pytree
+        manifest.json        {step, time, paths, dtypes, shapes, extra}
+
+Restore rebuilds the pytree and ``jax.device_put``s each leaf with the
+*current* mesh's sharding -- a checkpoint written on one mesh restores onto
+any other (elastic rescale), because arrays are stored logically, not
+per-device.  Writes can run on a background thread (async checkpointing);
+``wait()`` joins before the next save.  Retention keeps the newest k.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any
+
+import jax
+import numpy as np
+
+SEP = "//"
+
+
+def _flatten(tree) -> dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _unflatten_into(template, flat: dict):
+    paths = jax.tree_util.tree_flatten_with_path(template)[0]
+    treedef = jax.tree_util.tree_structure(template)
+    leaves = []
+    for path, _ in paths:
+        key = SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        leaves.append(flat[key])
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- write ---------------------------------------------------------
+    def save(self, step: int, state, extra: dict | None = None):
+        self.wait()
+        flat = _flatten(state)
+        host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+
+        def _write():
+            tmp = os.path.join(self.dir, f"step_{step:08d}.tmp")
+            final = os.path.join(self.dir, f"step_{step:08d}")
+            os.makedirs(tmp, exist_ok=True)
+            np.savez(os.path.join(tmp, "arrays.npz"), **host)
+            manifest = {
+                "step": step,
+                "time": time.time(),
+                "paths": sorted(host),
+                "extra": extra or {},
+            }
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)  # atomic publish
+            self._gc()
+
+        if self.async_save:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+        else:
+            _write()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"), ignore_errors=True)
+
+    # -- read ----------------------------------------------------------
+    def all_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                if os.path.exists(os.path.join(self.dir, name, "manifest.json")):
+                    out.append(int(name[5:]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, template, shardings=None):
+        """Rebuild the state pytree; ``shardings`` (same structure or a
+        single sharding) re-lays leaves onto the current mesh."""
+        path = os.path.join(self.dir, f"step_{step:08d}", "arrays.npz")
+        with np.load(path) as z:
+            flat = {k: z[k] for k in z.files}
+        tree = _unflatten_into(template, flat)
+        if shardings is not None:
+            if jax.tree_util.tree_structure(shardings) == jax.tree_util.tree_structure(tree):
+                tree = jax.tree.map(jax.device_put, tree, shardings)
+            else:
+                tree = jax.tree.map(lambda x: jax.device_put(x, shardings), tree)
+        else:
+            tree = jax.tree.map(jax.numpy.asarray, tree)
+        return tree
+
+    def manifest(self, step: int) -> dict:
+        with open(os.path.join(self.dir, f"step_{step:08d}", "manifest.json")) as f:
+            return json.load(f)

@@ -1,0 +1,40 @@
+"""Core: threshold and symmetric functions over packed bitmaps (the paper's
+contribution), plus the block-RLE adaptation and host-side list baselines."""
+
+from .bitmaps import (
+    WORD_BITS,
+    bitmap_and,
+    bitmap_andnot,
+    bitmap_not,
+    bitmap_or,
+    bitmap_xor,
+    cardinality,
+    density,
+    from_positions,
+    n_words_for,
+    pack,
+    popcount,
+    tail_mask,
+    to_positions_np,
+    unpack,
+)
+from .blockrle import BlockStats, classify_tiles, rbmrg_block_threshold, runcount
+from .circuits import (
+    Circuit,
+    build_interval_circuit,
+    build_symmetric_circuit,
+    build_threshold_circuit,
+    build_weight_circuit,
+    looped_op_count,
+    paper_tree_adder_gates,
+)
+from .planner import Plan, plan_threshold
+from .symmetric import exactly, interval, majority, parity, symmetric
+from .threshold import ALGORITHMS, hamming_weight_words, threshold, weighted_threshold
+from .bytecode import ByteCode, Interpreter, compile_circuit
+from .weighted import (
+    build_weighted_threshold_circuit,
+    decomposed_gate_cost,
+    replication_gate_cost,
+    weighted_threshold_decomposed,
+)

@@ -1,0 +1,129 @@
+"""Packed-bitmap primitives.
+
+A bitmap over ``r`` positions is stored as ``uint32`` words, LSB-first:
+bit ``i`` lives at word ``i // 32``, bit position ``i % 32``.  A *batch* of
+N bitmaps is a ``uint32[N, n_words]`` array.  On TPU each 32-bit lane op
+processes 8x128 lanes at once, so one VPU op handles 32_768 bitmap
+positions -- this is the paper's W (machine word) scaled to the vector unit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+WORD_BITS = 32
+WORD_DTYPE = jnp.uint32
+
+__all__ = [
+    "WORD_BITS",
+    "WORD_DTYPE",
+    "n_words_for",
+    "pack",
+    "unpack",
+    "popcount",
+    "cardinality",
+    "bitmap_and",
+    "bitmap_or",
+    "bitmap_xor",
+    "bitmap_andnot",
+    "bitmap_not",
+    "tail_mask",
+    "from_positions",
+    "to_positions_np",
+    "density",
+]
+
+
+def n_words_for(r: int) -> int:
+    """Number of 32-bit words needed for ``r`` bit positions."""
+    return (int(r) + WORD_BITS - 1) // WORD_BITS
+
+
+def tail_mask(r: int) -> int:
+    """Mask of valid bits in the final word for universe size ``r``."""
+    rem = int(r) % WORD_BITS
+    return 0xFFFFFFFF if rem == 0 else (1 << rem) - 1
+
+
+def pack(bits: jax.Array) -> jax.Array:
+    """Pack a boolean/int array ``[..., r]`` into ``uint32[..., ceil(r/32)]``."""
+    bits = jnp.asarray(bits)
+    r = bits.shape[-1]
+    nw = n_words_for(r)
+    pad = nw * WORD_BITS - r
+    if pad:
+        bits = jnp.pad(bits, [(0, 0)] * (bits.ndim - 1) + [(0, pad)])
+    bits = bits.astype(jnp.uint32).reshape(bits.shape[:-1] + (nw, WORD_BITS))
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    return jnp.sum(bits << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def unpack(words: jax.Array, r: int | None = None) -> jax.Array:
+    """Unpack ``uint32[..., n_words]`` into boolean ``[..., r]``."""
+    words = jnp.asarray(words, dtype=WORD_DTYPE)
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    bits = bits.reshape(words.shape[:-1] + (words.shape[-1] * WORD_BITS,))
+    if r is not None:
+        bits = bits[..., :r]
+    return bits.astype(jnp.bool_)
+
+
+def popcount(words: jax.Array) -> jax.Array:
+    """Per-word population count (int32)."""
+    return jax.lax.population_count(jnp.asarray(words, WORD_DTYPE)).astype(jnp.int32)
+
+
+def cardinality(words: jax.Array) -> jax.Array:
+    """Number of ones in each bitmap (sum over the word axis)."""
+    return jnp.sum(popcount(words), axis=-1)
+
+
+def bitmap_and(a, b):
+    return jnp.bitwise_and(a, b)
+
+
+def bitmap_or(a, b):
+    return jnp.bitwise_or(a, b)
+
+
+def bitmap_xor(a, b):
+    return jnp.bitwise_xor(a, b)
+
+
+def bitmap_andnot(a, b):
+    """a AND (NOT b) -- the paper's ANDNOT primitive."""
+    return jnp.bitwise_and(a, jnp.bitwise_not(b))
+
+
+def bitmap_not(a, r: int | None = None):
+    """Bitwise complement; masks the invalid tail bits when ``r`` is given."""
+    out = jnp.bitwise_not(jnp.asarray(a, WORD_DTYPE))
+    if r is not None:
+        nw = out.shape[-1]
+        mask = np.full(nw, 0xFFFFFFFF, dtype=np.uint32)
+        mask[-1] = tail_mask(r)
+        out = jnp.bitwise_and(out, jnp.asarray(mask))
+    return out
+
+
+def from_positions(positions, r: int) -> jax.Array:
+    """Build a packed bitmap from a (host) list/array of set positions."""
+    pos = np.asarray(positions, dtype=np.int64)
+    nw = n_words_for(r)
+    out = np.zeros(nw, dtype=np.uint32)
+    if pos.size:
+        np.bitwise_or.at(out, pos // WORD_BITS, np.uint32(1) << (pos % WORD_BITS).astype(np.uint32))
+    return jnp.asarray(out)
+
+
+def to_positions_np(words) -> np.ndarray:
+    """Host-side: sorted array of set positions in a packed bitmap."""
+    w = np.asarray(jax.device_get(words), dtype=np.uint32)
+    bits = np.unpackbits(w.view(np.uint8), bitorder="little")
+    return np.nonzero(bits)[0]
+
+
+def density(words, r: int) -> jax.Array:
+    return cardinality(words) / r

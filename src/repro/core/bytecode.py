@@ -1,0 +1,117 @@
+"""Byte-code compilation of circuits (the paper's 4.4.4 third approach).
+
+The paper compiles a gate DAG into straight-line byte code (AND / OR / XOR /
+ANDNOT / RECLAIM) executed by a trivial interpreter, with a last-use
+analysis so intermediate bitmaps are reclaimed eagerly -- their answer to
+the NP-hard Register Sufficiency problem.
+
+We reproduce that layer faithfully (it is also how our register-pressure
+claims for the Pallas kernel are justified): ``compile_circuit`` does the
+topological ordering + last-use analysis and assigns *register slots*;
+``Interpreter.run`` executes over uint32 word arrays (or Python ints).
+``peak_registers`` is the live-set bound the paper's Table 3 notes
+("register-allocation techniques would usually be able to share space").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from .circuits import CONST0, CONST1, Circuit
+
+__all__ = ["ByteCode", "compile_circuit", "Interpreter"]
+
+_OPS = {"and": 0, "or": 1, "xor": 2, "andnot": 3}
+
+
+@dataclasses.dataclass
+class ByteCode:
+    """(op, dst_reg, a_reg, b_reg) quadruples; negative regs = specials."""
+
+    n_inputs: int
+    n_registers: int
+    instructions: list  # (opcode, dst, a, b); a/b: >=0 reg, -1 const0, -2 const1,
+    #                     -(3+i) input i
+    output_reg: int
+    peak_registers: int
+
+
+def compile_circuit(circ: Circuit) -> ByteCode:
+    n_in = circ.n_inputs
+    n_gates = len(circ.ops)
+    # last use of every gate value (inputs/constants live throughout)
+    last_use = {}
+    for idx, (op, a, b) in enumerate(circ.ops):
+        for x in (a, b):
+            if x >= n_in:
+                last_use[x] = idx
+    for o in circ.outputs:
+        if o >= n_in:
+            last_use[o] = n_gates  # outputs live to the end
+
+    free: list[int] = []
+    reg_of: dict[int, int] = {}
+    n_regs = 0
+    peak = 0
+    instrs = []
+
+    def src(x: int) -> int:
+        if x == CONST0:
+            return -1
+        if x == CONST1:
+            return -2
+        if x < n_in:
+            return -(3 + x)
+        return reg_of[x]
+
+    for idx, (op, a, b) in enumerate(circ.ops):
+        sa, sb = src(a), src(b)
+        # reclaim operands whose last use is this instruction BEFORE
+        # allocating dst, so dst can reuse the slot (in-place style)
+        for x in (a, b):
+            if x >= n_in and last_use.get(x) == idx:
+                free.append(reg_of.pop(x))
+        if free:
+            dst = free.pop()
+        else:
+            dst = n_regs
+            n_regs += 1
+        reg_of[n_in + idx] = dst
+        peak = max(peak, len(reg_of))
+        instrs.append((_OPS[op], dst, sa, sb))
+    out = circ.outputs[0]
+    out_reg = src(out)
+    return ByteCode(n_in, n_regs, instrs, out_reg, peak)
+
+
+class Interpreter:
+    """Trivial straight-line interpreter over numpy uint32 word arrays."""
+
+    def run(self, bc: ByteCode, inputs: Sequence[np.ndarray]) -> np.ndarray:
+        nw = len(np.atleast_1d(inputs[0]))
+        regs = [None] * bc.n_registers
+        zero = np.zeros(nw, np.uint32)
+        ones = np.full(nw, 0xFFFFFFFF, np.uint32)
+
+        def val(s):
+            if s == -1:
+                return zero
+            if s == -2:
+                return ones
+            if s <= -3:
+                return np.asarray(inputs[-s - 3], np.uint32)
+            return regs[s]
+
+        for opcode, dst, a, b in bc.instructions:
+            va, vb = val(a), val(b)
+            if opcode == 0:
+                regs[dst] = va & vb
+            elif opcode == 1:
+                regs[dst] = va | vb
+            elif opcode == 2:
+                regs[dst] = va ^ vb
+            else:
+                regs[dst] = va & ~vb
+        return val(bc.output_reg)

@@ -1,0 +1,52 @@
+"""Algorithm selection -- the paper's 5.10 decision rules as a planner.
+
+Given (N, T) and cheap data statistics (density, clean-tile fraction),
+choose the algorithm a query engine should run.  The recommendations
+encode the paper's conclusions:
+
+  * T == 1 / T == N        -> wide OR / wide AND
+  * many clean runs        -> RBMRG (block variant here)
+  * very small T           -> LOOPED
+  * T close to N, sparse   -> pruning algorithms (host-side DSK)
+  * otherwise              -> SSUM ('if one does not know much about the
+                               data ... the adder circuits are safe bets')
+"""
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["Plan", "plan_threshold"]
+
+
+@dataclasses.dataclass
+class Plan:
+    algorithm: str
+    rationale: str
+
+
+def plan_threshold(
+    n: int,
+    t: int,
+    *,
+    density: float | None = None,
+    clean_fraction: float | None = None,
+    on_device: bool = True,
+) -> Plan:
+    if t <= 1:
+        return Plan("wide_or", "T<=1 is a wide OR (paper 2.3)")
+    if t >= n:
+        return Plan("wide_and", "T=N is a wide AND (paper 2.3)")
+    if clean_fraction is not None and clean_fraction > 0.5:
+        return Plan(
+            "rbmrg_block",
+            f"{clean_fraction:.0%} of tiles are clean runs; run-aware merge "
+            "does O(RUNCOUNT log N) work (paper 4.1, 5.10)",
+        )
+    if t <= 3:
+        return Plan("looped", "T very small: LOOPED is O(NT) ops and wins (paper 5.10)")
+    if not on_device and density is not None and density < 1e-3 and t >= 0.9 * n:
+        return Plan(
+            "dsk",
+            "sparse data with T~N: pruning algorithms win on the host (paper 5.8.3)",
+        )
+    return Plan("fused", "default: sideways-sum adder, fused kernel (paper 5.10 + ours)")

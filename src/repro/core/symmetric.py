@@ -1,0 +1,77 @@
+"""Arbitrary symmetric Boolean functions over packed bitmaps (paper 2.2/4.4.1).
+
+A symmetric function is determined by its value on each Hamming weight
+0..N.  We synthesise it from the weight bits of the sideways-sum circuit,
+merging contiguous true-runs into interval tests (>=lo ANDNOT >=hi+1),
+exactly the construction sketched in 4.4.1.
+
+Positions beyond ``r`` (the tail of the last word) have weight 0; when the
+function is true at weight 0 the caller-visible result is masked with
+``tail_mask`` so the packed result stays canonical.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import circuits as _ckt
+from .bitmaps import WORD_DTYPE, tail_mask
+
+__all__ = ["symmetric", "exactly", "interval", "parity", "majority"]
+
+
+def _mask_tail(words: jax.Array, r: int | None) -> jax.Array:
+    if r is None:
+        return words
+    nw = words.shape[-1]
+    mask = np.full(nw, 0xFFFFFFFF, dtype=np.uint32)
+    mask[-1] = tail_mask(r)
+    return jnp.bitwise_and(words, jnp.asarray(mask))
+
+
+@partial(jax.jit, static_argnames=("truth", "r"))
+def symmetric(bitmaps: jax.Array, truth: tuple, r: int | None = None) -> jax.Array:
+    """Apply the symmetric function given by ``truth[w]`` for weight w=0..N."""
+    bitmaps = jnp.asarray(bitmaps, WORD_DTYPE)
+    n = bitmaps.shape[0]
+    if len(truth) != n + 1:
+        raise ValueError(f"truth table needs {n + 1} entries, got {len(truth)}")
+    circ = _ckt.build_symmetric_circuit(n, list(truth))
+    (out,) = circ.evaluate([bitmaps[i] for i in range(n)])
+    return _mask_tail(out, r)
+
+
+def exactly(bitmaps, k: int, r: int | None = None):
+    """The paper's 'delta' function: weight == k exactly."""
+    n = bitmaps.shape[0]
+    return symmetric(bitmaps, tuple(w == k for w in range(n + 1)), r)
+
+
+def interval(bitmaps, lo: int, hi: int, r: int | None = None):
+    """Weight within [lo, hi] (e.g. 'on sale in 2 to 10 stores')."""
+    n = bitmaps.shape[0]
+    return symmetric(bitmaps, tuple(lo <= w <= hi for w in range(n + 1)), r)
+
+
+def parity(bitmaps, r: int | None = None):
+    """Wide XOR == z0 of the sideways sum; synthesised directly."""
+    bitmaps = jnp.asarray(bitmaps, WORD_DTYPE)
+    n = bitmaps.shape[0]
+    circ = _ckt.Circuit(n, [], [])
+    bits = _ckt.sideways_sum_bits(circ, list(range(n)))
+    circ.outputs = [bits[0]]
+    circ = circ.optimized()
+    (out,) = circ.evaluate([bitmaps[i] for i in range(n)])
+    return _mask_tail(out, r)
+
+
+def majority(bitmaps, r: int | None = None):
+    """theta(ceil(N/2)) -- the majority function."""
+    from .threshold import threshold
+
+    n = bitmaps.shape[0]
+    return threshold(bitmaps, (n + 1) // 2)

@@ -1,0 +1,227 @@
+"""Threshold functions over packed bitmaps -- the paper's core contribution.
+
+Every algorithm takes ``bitmaps: uint32[N, n_words]`` and a threshold ``T``
+(static Python int) and returns the packed result ``uint32[n_words]`` whose
+bit i is set iff at least T of the N input bitmaps have bit i set.
+
+Algorithms (paper section in parentheses):
+  * scancount   -- counter array over positions (4.2); also our oracle
+  * looped      -- O(NT) bit-parallel dynamic program (4.5, Algorithm 3)
+  * ssum        -- sideways-sum adder circuit (4.4.3)
+  * treeadd     -- tree-of-adders circuit (4.4.2)
+  * srtckt      -- Batcher sorting network (4.4.1)
+  * sopckt      -- sum-of-products circuit (4.4), tiny N/T only
+  * csvckt      -- carry-save vertical counter (4.5.1, Algorithm 4)
+  * fused       -- Pallas kernel evaluating the ssum circuit in VMEM
+                   (our TPU-native beyond-paper implementation)
+
+All the circuit algorithms are evaluated as straight-line jnp bitwise code
+(XLA = the paper's byte-code backend).  T is static: the paper tabulates
+circuits per (N, T); we let `jax.jit` re-trace per (N, T) which is the same
+tabulation realised through the XLA compile cache.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import circuits as _ckt
+from .bitmaps import WORD_DTYPE, pack, unpack
+
+__all__ = ["threshold", "hamming_weight_words", "ALGORITHMS"]
+
+
+# ---------------------------------------------------------------------------
+# SCANCOUNT (4.2) -- the oracle: per-position counters
+# ---------------------------------------------------------------------------
+
+
+def _scancount(bitmaps: jax.Array, t: int) -> jax.Array:
+    n = bitmaps.shape[0]
+    # counter dtype chosen like the paper's byte/short/int switch
+    if n < 128:
+        cdt = jnp.int8
+    elif n < (1 << 15):
+        cdt = jnp.int16
+    else:
+        cdt = jnp.int32
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = ((bitmaps[:, :, None] >> shifts) & jnp.uint32(1)).astype(cdt)
+    counts = jnp.sum(bits, axis=0, dtype=cdt if n < 128 else jnp.int32)
+    ge = counts >= jnp.asarray(t, counts.dtype)
+    return jnp.sum(ge.astype(jnp.uint32) << shifts, axis=-1, dtype=jnp.uint32)
+
+
+# ---------------------------------------------------------------------------
+# LOOPED (4.5, Algorithm 3): C_j |= C_{j-1} & B_i
+# ---------------------------------------------------------------------------
+
+
+def _looped(bitmaps: jax.Array, t: int) -> jax.Array:
+    n = bitmaps.shape[0]
+    cs = [jnp.zeros_like(bitmaps[0]) for _ in range(t + 1)]  # cs[1..t]
+    cs[1] = bitmaps[0]
+    for i in range(1, n):
+        b = bitmaps[i]
+        for j in range(min(t, i + 1), 1, -1):
+            cs[j] = cs[j] | (cs[j - 1] & b)
+        cs[1] = cs[1] | b
+    return cs[t]
+
+
+# ---------------------------------------------------------------------------
+# Circuit-based algorithms: build DAG at trace time, evaluate with jnp
+# ---------------------------------------------------------------------------
+
+
+def _circuit_threshold(bitmaps: jax.Array, t: int, kind: str) -> jax.Array:
+    n = bitmaps.shape[0]
+    circ = _ckt.build_threshold_circuit(n, t, kind)
+    ins = [bitmaps[i] for i in range(n)]
+    (out,) = circ.evaluate(ins)
+    return out
+
+
+def hamming_weight_words(bitmaps: jax.Array, kind: str = "ssum") -> list:
+    """Vertical counter: list of packed weight-bit planes, LSB first."""
+    n = bitmaps.shape[0]
+    circ = _ckt.build_weight_circuit(n, kind)
+    return circ.evaluate([bitmaps[i] for i in range(n)])
+
+
+# ---------------------------------------------------------------------------
+# CSVCKT (4.5.1, Algorithm 4): carry-save redundant vertical counter
+# ---------------------------------------------------------------------------
+
+
+def _csvckt(bitmaps: jax.Array, t: int) -> jax.Array:
+    n = bitmaps.shape[0]
+    zero = jnp.zeros_like(bitmaps[0])
+    ndigits = 1 + int(np.floor(np.log2(2 * n)))
+    c1 = [zero] * ndigits  # first bit of each redundant digit
+    c2 = [zero] * ndigits  # second bit
+    time = 0
+    for i in range(n):
+        c = bitmaps[i]
+        time += 1
+        x = (time & -time).bit_length() - 1  # number of trailing zeros of time
+        for p in range(min(x, ndigits)):
+            a, b = c1[p], c2[p]
+            c1[p] = zero
+            s = a ^ b
+            c2[p] = s ^ c
+            c = (a & b) | (c & s)
+        # remaining carry parks in the next digit's (guaranteed-free) slot
+        nxt = min(x, ndigits - 1)
+        c1[nxt] = c1[nxt] | c
+    # convert redundant encoding to binary
+    v = []
+    cin = zero
+    for i in range(ndigits):
+        a, b = c1[i], c2[i]
+        s = a ^ b
+        v.append(s ^ cin)
+        cin = (a & b) | (cin & s)
+    v.append(cin)
+    # compare against T: add -T (two's complement over ndigits+1 bits) and
+    # inspect the sign bit (paper: "subtract T and check the sign")
+    width = len(v)
+    neg_t = (-t) & ((1 << width) - 1)
+    cin = zero
+    out = []
+    for i in range(width):
+        a = v[i]
+        if (neg_t >> i) & 1:
+            s = ~a
+            out.append(s ^ cin)
+            cin = a | (cin & s)
+        else:
+            s = a
+            out.append(s ^ cin)
+            cin = cin & s
+    return ~out[width - 1]  # sign bit clear => count - T >= 0
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+def _scancount_streaming(bitmaps: jax.Array, t: int, chunk: int = 128) -> jax.Array:
+    """SCANCOUNT with a lax.scan over input chunks: O(r) counter state and
+    O(chunk * r) working set regardless of N -- the answer to the paper's
+    6 question ("would there be applications where N = 1,000,000?"): the
+    circuit family is infeasible there, streaming counters are not."""
+    n, nw = bitmaps.shape
+    pad = (-n) % chunk
+    if pad:
+        bitmaps = jnp.concatenate([bitmaps, jnp.zeros((pad, nw), WORD_DTYPE)])
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+
+    def body(counts, blk):
+        bits = ((blk[:, :, None] >> shifts) & jnp.uint32(1)).astype(jnp.int32)
+        return counts + bits.sum(0), 0
+
+    counts0 = jnp.zeros((nw, 32), jnp.int32)
+    counts, _ = jax.lax.scan(body, counts0, bitmaps.reshape(-1, chunk, nw))
+    return jnp.sum((counts >= t).astype(jnp.uint32) << shifts, axis=-1, dtype=jnp.uint32)
+
+
+ALGORITHMS = (
+    "scancount", "scancount_streaming", "looped", "ssum", "treeadd", "srtckt",
+    "sopckt", "csvckt", "fused",
+)
+
+
+@partial(jax.jit, static_argnames=("t", "algorithm"))
+def threshold(bitmaps: jax.Array, t: int, algorithm: str = "ssum") -> jax.Array:
+    """theta(T, {B_1..B_N}) over packed bitmaps; returns a packed bitmap.
+
+    T=1 is a wide OR and T=N a wide AND (the paper's degenerate cases);
+    those short-circuit for every algorithm except the explicit circuits.
+    """
+    bitmaps = jnp.asarray(bitmaps, WORD_DTYPE)
+    n = bitmaps.shape[0]
+    if not (isinstance(t, int)):
+        raise TypeError("T must be a static Python int (circuits are tabulated per (N,T))")
+    if t <= 0:
+        return jnp.full_like(bitmaps[0], 0xFFFFFFFF)
+    if t > n:
+        return jnp.zeros_like(bitmaps[0])
+    if algorithm == "scancount":
+        return _scancount(bitmaps, t)
+    if algorithm == "scancount_streaming":
+        return _scancount_streaming(bitmaps, t)
+    if algorithm == "looped":
+        return _looped(bitmaps, t)
+    if algorithm == "csvckt":
+        return _csvckt(bitmaps, t)
+    if algorithm in ("ssum", "treeadd", "srtckt", "sopckt"):
+        return _circuit_threshold(bitmaps, t, algorithm)
+    if algorithm == "fused":
+        from repro.kernels.ops import fused_threshold
+
+        return fused_threshold(bitmaps, t)
+    raise ValueError(f"unknown algorithm {algorithm!r}")
+
+
+def weighted_threshold(
+    bitmaps: jax.Array, weights: Sequence[int], t: int, algorithm: str = "ssum"
+) -> jax.Array:
+    """Weighted threshold via input replication (paper 2.3).
+
+    Integer weight w_i means bitmap i is replicated w_i times.  Practical
+    only for small weights, exactly as the paper notes.
+    """
+    reps = []
+    for i, w in enumerate(weights):
+        if w < 0:
+            raise ValueError("weights must be non-negative integers")
+        reps.extend([i] * int(w))
+    if not reps:
+        raise ValueError("all weights zero")
+    expanded = jnp.take(bitmaps, jnp.asarray(reps), axis=0)
+    return threshold(expanded, t, algorithm)

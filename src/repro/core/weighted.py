@@ -1,0 +1,90 @@
+"""Weighted threshold functions over bitmaps.
+
+The paper (2.3) handles integer weights by replicating input i w_i times
+and notes "this approach may be practical if weights are small.  Otherwise,
+the resulting threshold query may be impractically wide."
+
+Beyond-paper contribution: **binary weight decomposition**.  Write each
+weight w_i = sum_j 2^j * w_ij.  The weighted count is
+
+    sum_i w_i b_i = sum_j 2^j * (count of set inputs with bit j of weight)
+
+so we feed, for each j, the inputs whose weight has bit j into a sideways
+sum, then combine the per-level Hamming-weight digits with a shift-add:
+total circuit size O(sum_j s(|level_j|) + log-width adders) -- logarithmic
+in max(w) instead of linear (replication costs s(sum_i w_i) gates).
+
+Example: N=64 inputs with weights up to 1000.  Replication would build a
+~64000-input adder (~5 * 64000 = 320k gates); decomposition builds 10
+64-input sideways sums plus shift-adds (~10 * 5 * 64 + overhead ~= 4k gates),
+an ~80x reduction, still yielding a bitmap.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import circuits as C
+from .bitmaps import WORD_DTYPE
+
+__all__ = ["build_weighted_threshold_circuit", "weighted_threshold_decomposed",
+           "replication_gate_cost", "decomposed_gate_cost"]
+
+
+def build_weighted_threshold_circuit(weights: Sequence[int], t: int) -> C.Circuit:
+    """Circuit over N inputs computing sum_i w_i b_i >= t."""
+    n = len(weights)
+    wmax = max(weights)
+    total = sum(weights)
+    c = C.Circuit(n, [], [])
+    if t <= 0:
+        c.outputs = [C.CONST1]
+        return c
+    if t > total:
+        c.outputs = [C.CONST0]
+        return c
+    levels = wmax.bit_length()
+    # per-bit-level Hamming weights (LSB-first digit vectors)
+    acc_bits: list = []  # binary number, LSB first, accumulating shifted sums
+    acc_max = 0
+    for j in range(levels):
+        members = [i for i in range(n) if (weights[i] >> j) & 1]
+        if not members:
+            continue
+        digits = C.sideways_sum_bits(c, members)  # weight of this level
+        shifted = [C.CONST0] * j + digits  # x 2^j
+        level_max = len(members) << j
+        if not acc_bits:
+            acc_bits, acc_max = shifted, level_max
+        else:
+            width = max(len(acc_bits), len(shifted))
+            a = acc_bits + [C.CONST0] * (width - len(acc_bits))
+            b = shifted + [C.CONST0] * (width - len(shifted))
+            acc_max = acc_max + level_max
+            acc_bits = C._ripple_add(c, a, b, acc_max)
+            acc_bits = acc_bits[: max(1, acc_max.bit_length())]
+    out = C.ge_const(c, acc_bits, t)
+    c.outputs = [out]
+    return c.optimized()
+
+
+@partial(jax.jit, static_argnames=("weights", "t"))
+def weighted_threshold_decomposed(bitmaps: jax.Array, weights: tuple, t: int) -> jax.Array:
+    """Evaluate the decomposed weighted threshold over packed bitmaps."""
+    bitmaps = jnp.asarray(bitmaps, WORD_DTYPE)
+    circ = build_weighted_threshold_circuit(list(weights), t)
+    (out,) = circ.evaluate([bitmaps[i] for i in range(bitmaps.shape[0])])
+    return out
+
+
+def replication_gate_cost(weights: Sequence[int], t: int) -> int:
+    """Gate count of the paper's replication approach (for comparison)."""
+    n_rep = sum(weights)
+    return C.build_threshold_circuit(n_rep, t, "ssum").gate_count()
+
+
+def decomposed_gate_cost(weights: Sequence[int], t: int) -> int:
+    return build_weighted_threshold_circuit(list(weights), t).gate_count()

@@ -1,0 +1,1 @@
+from .monitor import Heartbeat, PreemptionHandler, StragglerEvent, StragglerMonitor

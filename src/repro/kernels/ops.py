@@ -1,0 +1,39 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On the CPU container the kernels run with interpret=True (the Pallas
+interpreter executes the kernel body in Python); on TPU backends the same
+call lowers through Mosaic.  ``INTERPRET`` auto-detects.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .threshold_ssum import pick_block_words, threshold_pallas
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def fused_threshold(bitmaps: jax.Array, t: int, block_words: int | None = None) -> jax.Array:
+    """Fused theta(T, .) over packed bitmaps uint32[N, n_words]."""
+    return threshold_pallas(bitmaps, t, block_words=block_words, interpret=INTERPRET)
+
+
+def fused_symmetric(bitmaps: jax.Array, truth, block_words: int | None = None) -> jax.Array:
+    """Fused arbitrary symmetric function given truth[w] for w = 0..N."""
+    return threshold_pallas(
+        bitmaps, None, truth=tuple(bool(x) for x in truth), block_words=block_words,
+        interpret=INTERPRET,
+    )
+
+
+def fused_interval(bitmaps: jax.Array, lo: int, hi: int) -> jax.Array:
+    n = bitmaps.shape[0]
+    return fused_symmetric(bitmaps, tuple(lo <= w <= hi for w in range(n + 1)))
+
+
+def fused_weighted_threshold(bitmaps: jax.Array, weights, t: int) -> jax.Array:
+    """Fused weighted threshold (binary weight decomposition, core/weighted)."""
+    return threshold_pallas(
+        bitmaps, t, weights=tuple(int(w) for w in weights), interpret=INTERPRET
+    )

@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for the kernels (SCANCOUNT-style vertical counters)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def _counts(bitmaps: jax.Array) -> jax.Array:
+    """int32 per-position counts, shape [n_words, 32]."""
+    bitmaps = jnp.asarray(bitmaps, jnp.uint32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (bitmaps[:, :, None] >> shifts) & jnp.uint32(1)
+    return jnp.sum(bits.astype(jnp.int32), axis=0)
+
+
+@partial(jax.jit, static_argnames=("t",))
+def threshold_ref(bitmaps: jax.Array, t: int) -> jax.Array:
+    """Oracle for the fused threshold kernel: counts >= T, packed."""
+    c = _counts(bitmaps)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    ge = (c >= t).astype(jnp.uint32)
+    return jnp.sum(ge << shifts, axis=-1, dtype=jnp.uint32)
+
+
+@partial(jax.jit, static_argnames=("truth",))
+def symmetric_ref(bitmaps: jax.Array, truth: tuple) -> jax.Array:
+    """Oracle for the fused symmetric kernel: truth[count], packed."""
+    c = _counts(bitmaps)
+    table = jnp.asarray(truth, jnp.uint32)
+    val = table[c]
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(val << shifts, axis=-1, dtype=jnp.uint32)

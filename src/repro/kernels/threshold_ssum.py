@@ -1,0 +1,103 @@
+"""Fused sideways-sum threshold kernel (Pallas, TPU target).
+
+The paper's circuit algorithms are "horizontal": W bits of every input are
+combined into W output bits using ~5N bitwise ops (4.4.3).  Evaluated as
+composed jnp ops, every intermediate bit-plane round-trips through HBM --
+~5N extra bitmap reads/writes.  The fused kernel streams one
+(N, block_words) tile of packed words HBM->VMEM, evaluates the whole
+sideways-sum + comparator network on VMEM values (VPU bitwise ops over
+uint32 lanes), and writes a single (block_words,) output tile.
+
+HBM traffic drops from ~(1 + 2*5)x input bytes to ~(1 + 1/N)x -- the
+arithmetic intensity of the circuit (~5 VPU ops / 4 B) stays memory-bound,
+so traffic is the roofline term and the fusion is worth ~an order of
+magnitude (see EXPERIMENTS.md Perf, kernel section).
+
+Tiling: the word axis is split into ``block_words`` chunks (grid dim 0);
+the full N axis rides along in VMEM because every level of the adder needs
+all lanes of the previous level.  VMEM footprint ~= (N input rows + ~N/2
+live intermediates) * block_words * 4 B; ``pick_block_words`` sizes the
+block to a VMEM budget and keeps it a multiple of 1024 words (8 * 128
+lanes * 32 bits = one packed VPU tile of bit positions).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import circuits as _ckt
+
+LANE_WORDS = 1024  # words per (8,128) int32 vreg tile
+
+
+def pick_block_words(n: int, n_words: int, vmem_budget_bytes: int = 4 * 1024 * 1024) -> int:
+    """Largest lane-aligned block s.t. ~2N live rows fit in the VMEM budget."""
+    live_rows = max(2 * n, 4)
+    bw = vmem_budget_bytes // (live_rows * 4)
+    bw = max(LANE_WORDS, (bw // LANE_WORDS) * LANE_WORDS)
+    total = ((n_words + LANE_WORDS - 1) // LANE_WORDS) * LANE_WORDS
+    return min(bw, total)
+
+
+def _threshold_kernel(in_ref, out_ref, *, circuit: _ckt.Circuit, n: int):
+    rows = [in_ref[i, :] for i in range(n)]
+    (out,) = circuit.evaluate(
+        rows,
+        zeros=jnp.zeros_like(rows[0]),
+        ones=jnp.full_like(rows[0], 0xFFFFFFFF),
+    )
+    out_ref[:] = out
+
+
+@functools.partial(
+    jax.jit, static_argnames=("t", "block_words", "interpret", "kind", "truth", "weights")
+)
+def threshold_pallas(
+    bitmaps: jax.Array,
+    t: int | None = None,
+    *,
+    truth: tuple | None = None,
+    weights: tuple | None = None,
+    kind: str = "ssum",
+    block_words: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """theta(T, .) fused; ``truth`` selects an arbitrary symmetric function,
+    ``weights`` a weighted threshold (binary-decomposed circuit).
+
+    bitmaps: uint32[N, n_words].  Returns uint32[n_words].
+    """
+    bitmaps = jnp.asarray(bitmaps, jnp.uint32)
+    n, n_words = bitmaps.shape
+    if weights is not None:
+        from repro.core.weighted import build_weighted_threshold_circuit
+
+        assert t is not None and len(weights) == n
+        circuit = build_weighted_threshold_circuit(list(weights), t)
+    elif truth is not None:
+        circuit = _ckt.build_symmetric_circuit(n, list(truth), kind)
+    else:
+        assert t is not None
+        if t <= 0:
+            return jnp.full((n_words,), 0xFFFFFFFF, jnp.uint32)
+        if t > n:
+            return jnp.zeros((n_words,), jnp.uint32)
+        circuit = _ckt.build_threshold_circuit(n, t, kind)
+    if block_words is None:
+        block_words = pick_block_words(n, n_words)
+    padded = pl.cdiv(n_words, block_words) * block_words
+    if padded != n_words:
+        bitmaps = jnp.pad(bitmaps, ((0, 0), (0, padded - n_words)))
+    grid = (padded // block_words,)
+    out = pl.pallas_call(
+        functools.partial(_threshold_kernel, circuit=circuit, n=n),
+        grid=grid,
+        in_specs=[pl.BlockSpec((n, block_words), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((block_words,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((padded,), jnp.uint32),
+        interpret=interpret,
+    )(bitmaps)
+    return out[:n_words]

@@ -1,0 +1,306 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves on placeholder devices that the distribution
+config is coherent: shardings are accepted, the collective schedule builds,
+and memory_analysis shows per-device fit.  cost_analysis + the HLO
+collective scan feed benchmarks/roofline.py.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x22b \
+        --shape train_4k --mesh single --out artifacts/dryrun
+
+(no flags = every runnable cell on both meshes; skips cells whose artifact
+JSON already exists unless --force).
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from functools import partial  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ARCHS, cell_is_runnable, get_config, shape_cells  # noqa: E402
+from repro.configs.base import ModelConfig  # noqa: E402
+from repro.dist.context import ShardingRules, use_rules  # noqa: E402
+from repro.models import decode_step, forward, init_cache, init_params  # noqa: E402
+from repro.models.model import logits_from_hidden  # noqa: E402
+from repro.train import OptConfig, TrainConfig, init_train_state, make_train_step  # noqa: E402
+
+from .mesh import make_production_mesh, mesh_axis_sizes  # noqa: E402
+from .sharding import (  # noqa: E402
+    batch_shardings,
+    cache_shardings,
+    param_shardings,
+    state_shardings,
+)
+
+PARAM_DTYPE = jnp.bfloat16
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(cfg: ModelConfig, batch: int, seq: int, with_labels: bool) -> dict:
+    sds = jax.ShapeDtypeStruct
+    out: dict = {}
+    if cfg.frontend == "audio":
+        out["features"] = sds((batch, seq, cfg.frontend_dim), jnp.bfloat16)
+        if with_labels:
+            out["labels"] = sds((batch, seq), jnp.int32)
+        return out
+    s_text = seq - (cfg.frontend_tokens if cfg.frontend == "vision" else 0)
+    if cfg.frontend == "vision":
+        out["patches"] = sds((batch, cfg.frontend_tokens, cfg.frontend_dim), jnp.bfloat16)
+    out["tokens"] = sds((batch, s_text), jnp.int32)
+    if with_labels:
+        out["labels"] = sds((batch, seq), jnp.int32)
+        if cfg.frontend == "vision":
+            out["mask"] = sds((batch, seq), jnp.float32)
+    return out
+
+
+def input_specs(arch: str, shape: str) -> dict:
+    """Public entry: ShapeDtypeStructs for every model input of a cell."""
+    cfg = get_config(arch)
+    cell = shape_cells()[shape]
+    return batch_specs(cfg, cell["global_batch"], cell["seq_len"], cell["kind"] == "train")
+
+
+# ---------------------------------------------------------------------------
+# step builders per cell kind
+# ---------------------------------------------------------------------------
+
+
+def _prefill_step(params, batch, *, cfg: ModelConfig):
+    h, caches, _ = forward(params, cfg, batch, mode="prefill")
+    if cfg.encoder_only:
+        return logits_from_hidden(params, cfg, h), caches
+    return logits_from_hidden(params, cfg, h[:, -1:]), caches
+
+
+def build_cell(arch: str, shape: str, mesh):
+    """Returns (fn, arg_sds, in_shardings, donate) for jit+lower."""
+    cfg = get_config(arch)
+    cell = shape_cells()[shape]
+    b, s, kind = cell["global_batch"], cell["seq_len"], cell["kind"]
+    rules = ShardingRules(
+        mesh, seq_sharded=os.environ.get("DRYRUN_SEQ_SHARDED", "1") == "1"
+    )
+
+    if kind == "train":
+        tc = TrainConfig(
+            opt=OptConfig(),
+            remat=True,
+            remat_policy=os.environ.get("DRYRUN_REMAT_POLICY", "full"),
+            loss_chunk=int(os.environ.get("DRYRUN_LOSS_CHUNK", "512")),
+        )
+        state_sds = jax.eval_shape(
+            partial(init_train_state, cfg, param_dtype=PARAM_DTYPE), jax.random.PRNGKey(0)
+        )
+        bs = batch_specs(cfg, b, s, True)
+        st_sh = state_shardings(state_sds, mesh, cfg)
+        b_sh = batch_shardings(bs, mesh, b)
+        fn = make_train_step(cfg, tc)
+        return fn, (state_sds, bs), (st_sh, b_sh), (0,), rules
+
+    if kind == "prefill":
+        params_sds = jax.eval_shape(
+            lambda k: init_params(cfg, k, PARAM_DTYPE), jax.random.PRNGKey(0)
+        )
+        bs = batch_specs(cfg, b, s, False)
+        fn = partial(_prefill_step, cfg=cfg)
+        return (
+            fn,
+            (params_sds, bs),
+            (param_shardings(params_sds, mesh, cfg), batch_shardings(bs, mesh, b)),
+            (),
+            rules,
+        )
+
+    # decode: one new token against a cache of seq_len
+    params_sds = jax.eval_shape(
+        lambda k: init_params(cfg, k, PARAM_DTYPE), jax.random.PRNGKey(0)
+    )
+    cache_sds = jax.eval_shape(partial(init_cache, cfg, b, s, PARAM_DTYPE))
+    tok_sds = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+    fn = partial(decode_step, cfg=cfg)
+
+    def step(params, caches, tokens, pos):
+        return decode_step(params, cfg, caches, tokens, pos)
+
+    shardings = (
+        param_shardings(params_sds, mesh, cfg),
+        cache_shardings(cache_sds, mesh, cfg, b),
+        NamedSharding(mesh, P(None, None)),
+        NamedSharding(mesh, P()),
+    )
+    return step, (params_sds, cache_sds, tok_sds, pos_sds), shardings, (1,), rules
+
+
+# ---------------------------------------------------------------------------
+# HLO collective accounting
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute",
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shapes_bytes(sig: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(sig):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device bytes moved by each collective kind (output-shape sizes)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\(?[^=]*?\)?)\s*(all-reduce|all-gather|"
+                     r"reduce-scatter|all-to-all|collective-permute)(-start|-done)?\(", line)
+        if not m:
+            continue
+        if m.group(3) == "-done":
+            continue  # counted at -start
+        sig, kind = m.group(1), m.group(2)
+        out[kind] += _shapes_bytes(sig)
+        counts[kind] += 1
+    return {"bytes": out, "counts": counts, "total_bytes": sum(out.values())}
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: str, force: bool = False):
+    tag = f"{arch}__{shape}__{mesh_kind}"
+    path = os.path.join(out_dir, tag + ".json")
+    if os.path.exists(path) and not force:
+        print(f"[skip-cached] {tag}")
+        return json.load(open(path))
+    ok, why = cell_is_runnable(arch, shape)
+    if not ok:
+        rec = {"arch": arch, "shape": shape, "mesh": mesh_kind, "status": "SKIP", "reason": why}
+        json.dump(rec, open(path, "w"), indent=1)
+        print(f"[skip] {tag}: {why}")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    try:
+        fn, args, shardings, donate, rules = build_cell(arch, shape, mesh)
+        with use_rules(rules):
+            with mesh:
+                jitted = jax.jit(fn, in_shardings=shardings, donate_argnums=donate)
+                lowered = jitted.lower(*args)
+                t_lower = time.time() - t0
+                compiled = lowered.compile()
+                t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        coll = collective_bytes(hlo)
+        # loop-aware accounting: XLA cost_analysis counts while bodies once;
+        # the scan-over-layers models need trip-count multiplication
+        from .hlo_analysis import analyze_hlo
+
+        loop_aware = analyze_hlo(hlo)
+        mem_rec = {}
+        if mem is not None:
+            for attr in (
+                "temp_size_in_bytes",
+                "argument_size_in_bytes",
+                "output_size_in_bytes",
+                "alias_size_in_bytes",
+                "generated_code_size_in_bytes",
+            ):
+                mem_rec[attr] = int(getattr(mem, attr, 0) or 0)
+        cost_rec = {}
+        if cost:
+            c = cost if isinstance(cost, dict) else cost[0]
+            for k in ("flops", "bytes accessed", "transcendentals", "optimal_seconds"):
+                if k in c:
+                    cost_rec[k] = float(c[k])
+        rec = {
+            "arch": arch,
+            "shape": shape,
+            "mesh": mesh_kind,
+            "status": "OK",
+            "mesh_shape": dict(mesh_axis_sizes(mesh)),
+            "n_devices": int(np.prod(mesh.devices.shape)),
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "memory_analysis": mem_rec,
+            "cost_analysis": cost_rec,
+            "collectives": coll,
+            "loop_aware": loop_aware,
+        }
+        print(
+            f"[ok] {tag}: compile {t_compile:.0f}s, "
+            f"flops/dev {cost_rec.get('flops', 0):.3e}, "
+            f"coll_bytes/dev {coll['total_bytes']:.3e}, "
+            f"temp/dev {mem_rec.get('temp_size_in_bytes', 0) / 2**30:.2f} GiB"
+        )
+    except Exception as e:  # noqa: BLE001
+        rec = {
+            "arch": arch,
+            "shape": shape,
+            "mesh": mesh_kind,
+            "status": "FAIL",
+            "error": f"{type(e).__name__}: {e}",
+            "traceback": traceback.format_exc()[-4000:],
+        }
+        print(f"[FAIL] {tag}: {type(e).__name__}: {str(e)[:300]}")
+    os.makedirs(out_dir, exist_ok=True)
+    json.dump(rec, open(path, "w"), indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ARCHS) + [None])
+    ap.add_argument("--shape", default=None, choices=list(shape_cells()) + [None])
+    ap.add_argument("--mesh", default=None, choices=["single", "multi", None])
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else list(shape_cells())
+    meshes = [args.mesh] if args.mesh else ["single", "multi"]
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                rec = run_cell(arch, shape, mesh_kind, args.out, args.force)
+                n_fail += rec.get("status") == "FAIL"
+    print(f"done; failures: {n_fail}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

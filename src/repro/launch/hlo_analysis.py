@@ -1,0 +1,221 @@
+"""Loop-aware HLO accounting.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE, so a
+48-layer scan-over-layers model under-reports FLOPs and collective bytes by
+~48x.  This module parses the post-optimisation HLO text, builds the
+computation call graph (while bodies with static trip counts extracted from
+their condition computations, fusions, calls), and accumulates with loop
+multipliers:
+
+  * dot FLOPs: 2 x |output| x contraction size per ``dot`` op
+  * collective bytes by kind (all-reduce / all-gather / reduce-scatter /
+    all-to-all / collective-permute), output-shape sized
+  * an HBM-traffic proxy: sum of output bytes x 2 over non-trivial ops
+
+Elementwise FLOPs are not counted (dots dominate the archs here; the
+rglru/rwkv elementwise recurrences are noted as undercounted in
+EXPERIMENTS.md).  All numbers are per device (the module is partitioned).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_TRIVIAL = ("parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+            "after-all", "iota")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(?[^=]*?\)?)\s*([\w\-]+)\(")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
+
+
+def _split_params(params: str) -> list[str]:
+    """Split a parameter list on top-level commas (tuple types nest parens)."""
+    out, depth, cur = [], 0, []
+    for ch in params:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur))
+    return out
+
+
+def _shape_info(sig: str):
+    """All (dtype, dims) in a type signature; returns list and total bytes."""
+    shapes = []
+    for dt, dims in _SHAPE_RE.findall(sig):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        shapes.append((dt, dims, n))
+    byts = sum(n * _DTYPE_BYTES[dt] for dt, _, n in shapes)
+    return shapes, byts
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.comps: dict[str, list[str]] = {}
+        self.entry: str | None = None
+        cur, buf = None, []
+        for line in text.splitlines():
+            m = _COMP_RE.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = m.group(1)
+                self.comps[cur] = buf = [line]
+                if line.strip().startswith("ENTRY"):
+                    self.entry = cur
+            elif cur is not None:
+                buf.append(line)
+                if line.strip() == "}":
+                    cur = None
+        if self.entry is None and self.comps:
+            # entry is typically the last computation in the dump
+            self.entry = list(self.comps)[-1]
+        self._shapes_cache: dict[str, dict[str, str]] = {}
+
+    # -- per-computation symbol table -----------------------------------
+    def shapes(self, comp: str) -> dict[str, str]:
+        if comp in self._shapes_cache:
+            return self._shapes_cache[comp]
+        table: dict[str, str] = {}
+        lines = self.comps[comp]
+        # parameters from the signature
+        m = _COMP_RE.match(lines[0].strip().removeprefix("ENTRY "))
+        if m:
+            for part in _split_params(m.group(2)):
+                part = part.strip()
+                if ":" in part:
+                    nm, ty = part.split(":", 1)
+                    table[nm.strip().lstrip("%")] = ty.strip()
+        for line in lines[1:]:
+            om = _OP_RE.match(line)
+            if om:
+                table[om.group(1)] = om.group(2)
+        self._shapes_cache[comp] = table
+        return table
+
+    def _trip_count(self, cond_comp: str) -> int:
+        """Largest s32 constant in the condition computation (+fusions)."""
+        best = 1
+        seen = {cond_comp}
+        stack = [cond_comp]
+        while stack:
+            c = stack.pop()
+            for line in self.comps.get(c, []):
+                for m in re.finditer(r"constant\((\d+)\)", line):
+                    best = max(best, int(m.group(1)))
+                cm = re.search(r"calls=%?([\w.\-]+)", line)
+                if cm and cm.group(1) not in seen:
+                    seen.add(cm.group(1))
+                    stack.append(cm.group(1))
+        return best
+
+    # -- accounting -------------------------------------------------------
+    def _edges(self) -> list[tuple[str, str, int]]:
+        """(caller, callee, factor) edges of the computation call graph."""
+        edges = []
+        self.fusion_bodies: set[str] = set()
+        for comp, lines in self.comps.items():
+            for line in lines:
+                om = _OP_RE.match(line)
+                if om and om.group(3) in ("fusion", "reduce", "map", "sort",
+                                          "reduce-window", "scatter", "select-and-scatter"):
+                    fm = re.search(r"(?:calls|to_apply)=%?([\w.\-]+)", line)
+                    if fm:
+                        self.fusion_bodies.add(fm.group(1))
+                wm = re.search(r"while\(.*condition=%?([\w.\-]+), body=%?([\w.\-]+)",
+                               line)
+                if wm:
+                    cond, body = wm.groups()
+                    trips = self._trip_count(cond)
+                    edges.append((comp, body, trips))
+                    edges.append((comp, cond, trips + 1))
+                    continue
+                for pat in (r"calls=%?([\w.\-]+)", r"to_apply=%?([\w.\-]+)",
+                            r"true_computation=%?([\w.\-]+)",
+                            r"false_computation=%?([\w.\-]+)",
+                            r"branch_computations=\{%?([\w.\-]+)"):
+                    for cm in re.finditer(pat, line):
+                        edges.append((comp, cm.group(1), 1))
+        return edges
+
+    def analyze(self) -> dict:
+        edges = self._edges()
+        mult: dict[str, float] = defaultdict(float)
+        mult[self.entry] = 1.0
+        # fixpoint relaxation over the DAG (converges in <= depth passes)
+        for _ in range(64):
+            new: dict[str, float] = defaultdict(float)
+            new[self.entry] = 1.0
+            for caller, callee, f in edges:
+                new[callee] += mult.get(caller, 0.0) * f
+            if dict(new) == dict(mult):
+                break
+            mult = new
+
+        flops = 0.0
+        coll = {k: 0.0 for k in _COLLECTIVES}
+        coll_counts = {k: 0.0 for k in _COLLECTIVES}
+        traffic = 0.0
+        for comp, m in mult.items():
+            if m <= 0 or comp not in self.comps:
+                continue
+            table = self.shapes(comp)
+            for line in self.comps[comp]:
+                om = _OP_RE.match(line)
+                if not om:
+                    continue
+                name, sig, op = om.groups()
+                shapes, byts = _shape_info(sig)
+                # fusion bodies execute in registers/VMEM: only the fusion
+                # op's own output (counted in the caller) touches HBM
+                if op not in _TRIVIAL and byts and comp not in self.fusion_bodies:
+                    traffic += 2.0 * byts * m
+                if op == "dot":
+                    args = re.search(r"dot\(([^)]*)\)", line)
+                    lhs = args.group(1).split(",")[0].strip().lstrip("%") if args else ""
+                    lhs_sig = table.get(lhs, "")
+                    lhs_shapes, _ = _shape_info(lhs_sig)
+                    cdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+                    k = 1
+                    if lhs_shapes and cdims:
+                        dims = [int(x) for x in lhs_shapes[0][1].split(",") if x]
+                        for ci in cdims.group(1).split(","):
+                            if ci and int(ci) < len(dims):
+                                k *= dims[int(ci)]
+                    out_elems = sum(n for _, _, n in shapes)
+                    flops += 2.0 * out_elems * k * m
+                elif op.rstrip("-start") in _COLLECTIVES or op in _COLLECTIVES:
+                    kind = op[:-6] if op.endswith("-start") else op
+                    if kind in _COLLECTIVES:
+                        coll[kind] += byts * m
+                        coll_counts[kind] += m
+        return {
+            "dot_flops": flops,
+            "collective_bytes": coll,
+            "collective_total": sum(coll.values()),
+            "collective_counts": coll_counts,
+            "hbm_traffic_proxy": traffic,
+            "n_computations": len(self.comps),
+        }
+
+
+def analyze_hlo(text: str) -> dict:
+    return HloModule(text).analyze()

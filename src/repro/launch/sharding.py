@@ -1,0 +1,158 @@
+"""Sharding rules: params (FSDP x TP), optimizer state, inputs, caches.
+
+Conventions (see DESIGN.md 6):
+  * TP ('model' axis): attention q/kv projections and ffn on the feature
+    dim; vocab on the embedding/lm-head when divisible.
+  * FSDP (('pod','data') axes): the other matrix dim of every large param
+    (ZeRO-3; optimizer state inherits the param spec).
+  * Any dim that does not divide its assigned axes falls back to
+    replicated -- rules are *best effort by construction* so every arch in
+    the zoo shards without per-arch tables.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+FSDP = ("pod", "data")
+TP = "model"
+
+
+def _axes_size(mesh: Mesh, axes) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return sizes.get(axes, 1)
+    return int(np.prod([sizes.get(a, 1) for a in axes]))
+
+
+def _fit(mesh: Mesh, spec_entries, shape) -> P:
+    """Drop assignments that do not divide; prune absent mesh axes."""
+    names = set(mesh.axis_names)
+    out = []
+    for dim, entry in zip(shape, spec_entries):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        axes = tuple(a for a in axes if a in names)
+        if not axes or dim % _axes_size(mesh, axes) != 0:
+            out.append(None)
+        else:
+            out.append(axes if len(axes) > 1 else axes[0])
+    return P(*out)
+
+
+def _param_spec(path: str, shape, mesh: Mesh) -> P:
+    nd = len(shape)
+    fsdp = FSDP
+
+    def fit(*entries):
+        return _fit(mesh, entries, shape)
+
+    if "embed" == path.split("//")[-1]:
+        spec = _fit(mesh, (TP, fsdp), shape)
+        if spec[0] is None:  # vocab not divisible: spread d_model over all axes
+            return _fit(mesh, (None, ("pod", "data", "model")), shape)
+        return spec
+    if path.endswith("lm_head"):
+        spec = _fit(mesh, (fsdp, TP), shape)
+        if spec[1] is None:
+            return _fit(mesh, (("pod", "data", "model"), None), shape)
+        return spec
+    last = path.split("//")[-1]
+    # stacked block params have a leading layer dim -> prepend None
+    lead = (None,) * (nd - 2)
+    if last in ("wq", "wk", "wv", "w_gate", "w_up", "w_x", "w_y", "w_a", "w_i", "ck",
+                "wr", "wg", "mix_A", "w_A"):
+        return fit(*lead, fsdp, TP)
+    if last in ("wo", "w_down", "w_o", "cv", "cr", "mix_B", "w_B"):
+        return fit(*lead, TP, fsdp)
+    if last == "router":
+        return fit(*lead, fsdp, None)
+    if last in ("conv_w",):
+        return fit(*lead, None, TP)
+    if last in ("lambda", "conv_b"):
+        return fit(*lead, TP)
+    if last == "frontend_proj":
+        return fit(None, fsdp)
+    if nd >= 1 and shape[-1] > 1024:  # misc vectors (norm scales etc.)
+        return fit(*(None,) * (nd - 1), fsdp)
+    return P(*(None,) * nd)
+
+
+def _moe_param_spec(path: str, shape, mesh: Mesh) -> P | None:
+    """MoE expert weights: [.., E, D, F] / [.., E, F, D]."""
+    last = path.split("//")[-1]
+    nd = len(shape)
+    lead = (None,) * (nd - 3)
+    if last in ("w_gate", "w_up") and nd >= 3:
+        return _fit(mesh, (*lead, None, FSDP, TP), shape)
+    if last == "w_down" and nd >= 3:
+        return _fit(mesh, (*lead, None, TP, FSDP), shape)
+    return None
+
+
+def param_shardings(params, mesh: Mesh, cfg: ModelConfig):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        key = "//".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        spec = None
+        if cfg.moe and ("ffn" in key) and len(leaf.shape) >= 3:
+            spec = _moe_param_spec(key, leaf.shape, mesh)
+        if spec is None:
+            spec = _param_spec(key, leaf.shape, mesh)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(params), out)
+
+
+def state_shardings(state, mesh: Mesh, cfg: ModelConfig):
+    ps = param_shardings(state["params"], mesh, cfg)
+    return {
+        "params": ps,
+        "opt": {
+            "m": ps,
+            "v": ps,
+            "step": NamedSharding(mesh, P()),
+        },
+    }
+
+
+def batch_shardings(batch, mesh: Mesh, global_batch: int):
+    dp = _axes_size(mesh, FSDP)
+    baxes = tuple(a for a in FSDP if a in mesh.axis_names)
+    b = baxes if (baxes and global_batch % dp == 0) else None
+
+    def spec(leaf):
+        return NamedSharding(mesh, P(b, *([None] * (leaf.ndim - 1))))
+
+    return jax.tree.map(spec, batch)
+
+
+def cache_shardings(cache, mesh: Mesh, cfg: ModelConfig, batch: int):
+    """Decode caches: batch over data when divisible; KV sequence over TP
+    (sequence-parallel decode -- this is how GQA kv_heads < TP stays legal)."""
+    dp = _axes_size(mesh, FSDP)
+    baxes = tuple(a for a in FSDP if a in mesh.axis_names)
+    b = baxes if (baxes and batch % dp == 0) else None
+
+    def spec(leaf):
+        # leading dim is the stacked-layer dim
+        if leaf.ndim == 5:  # kv cache [R, B, Sc, H, hd] or rwkv [R,B,H,dk,dv]
+            sc = leaf.shape[2]
+            third = TP if sc % _axes_size(mesh, TP) == 0 and sc > 1024 else None
+            return NamedSharding(mesh, P(None, b, third, None, None))
+        if leaf.ndim == 4:  # conv state [R, B, cw-1, W]
+            return NamedSharding(mesh, P(None, b, None, None))
+        if leaf.ndim == 3:  # cpos [R, B, Sc] or states [R, B, W/D]
+            sc = leaf.shape[2]
+            third = TP if sc % _axes_size(mesh, TP) == 0 and sc > 1024 else None
+            return NamedSharding(mesh, P(None, b, third))
+        return NamedSharding(mesh, P(*([None] * leaf.ndim)))
+
+    return jax.tree.map(spec, cache)

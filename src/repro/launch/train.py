@@ -1,0 +1,113 @@
+"""Production train driver: sharded, checkpointed, fault-tolerant.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --reduced \
+        --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+Features exercised end-to-end (all testable on CPU with the reduced
+configs; the same code paths drive the production mesh):
+  * mesh + FSDP/TP shardings from launch/sharding.py
+  * auto-resume from the newest checkpoint (crash recovery)
+  * deterministic data stream keyed by (seed, step) -- restart replays
+  * async checkpointing every --ckpt-every steps, atomic publish
+  * preemption handling (SIGTERM -> final sync checkpoint)
+  * straggler monitor on step wall-times
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt import CheckpointManager
+from repro.configs import get_config
+from repro.data import DataConfig, lm_batch
+from repro.dist.context import ShardingRules, use_rules
+from repro.ft import PreemptionHandler, StragglerMonitor
+from repro.train import OptConfig, TrainConfig, init_train_state, make_train_step
+
+from .mesh import make_host_mesh, make_production_mesh
+from .sharding import batch_shardings, state_shardings
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--param-dtype", default="float32")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    mesh = make_production_mesh() if args.production_mesh else make_host_mesh()
+    rules = ShardingRules(mesh, batch_shardable=args.batch % mesh.devices.size == 0)
+    tc = TrainConfig(
+        opt=OptConfig(peak_lr=args.lr, warmup_steps=10, total_steps=args.steps),
+        remat=args.remat,
+        microbatches=args.microbatches,
+    )
+    dc = DataConfig(vocab=cfg.vocab, batch=args.batch, seq=args.seq, seed=args.seed)
+    mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+
+    with use_rules(rules), mesh:
+        state = init_train_state(cfg, jax.random.PRNGKey(args.seed), jnp.dtype(args.param_dtype))
+        st_sh = state_shardings(state, mesh, cfg)
+        state = jax.tree.map(jax.device_put, state, st_sh)
+        start = 0
+        if mgr and mgr.latest_step() is not None:
+            start = mgr.latest_step()
+            state = mgr.restore(start, state, st_sh)
+            print(f"[resume] restored step {start} from {args.ckpt_dir}")
+
+        step_fn = jax.jit(
+            make_train_step(cfg, tc),
+            in_shardings=(st_sh, batch_shardings(lm_batch(dc, 0), mesh, args.batch)),
+            donate_argnums=0,
+        )
+        monitor = StragglerMonitor()
+        preempt = PreemptionHandler()
+        preempt.install()
+
+        for step in range(start, args.steps):
+            t0 = time.time()
+            batch = lm_batch(dc, step)
+            state, metrics = step_fn(state, batch)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            dt = time.time() - t0
+            ev = monitor.record(step, dt)
+            if ev:
+                print(f"[straggler] step {ev.step}: {ev.ratio:.1f}x EWMA -> mitigation hook")
+            if step % 10 == 0 or step == args.steps - 1:
+                print(
+                    f"step {step:5d} loss {metrics['loss']:.4f} "
+                    f"gnorm {metrics['grad_norm']:.3f} lr {metrics['lr']:.2e} {dt * 1e3:.0f} ms"
+                )
+            if mgr and (step + 1) % args.ckpt_every == 0:
+                mgr.save(step + 1, state)
+            if preempt.should_stop:
+                print(f"[preempt] signal received; checkpointing at step {step + 1}")
+                if mgr:
+                    mgr.wait()
+                    mgr.save(step + 1, state)
+                    mgr.wait()
+                break
+        if mgr:
+            mgr.wait()
+            if (args.steps % args.ckpt_every) and not preempt.should_stop:
+                mgr.save(args.steps, state)
+                mgr.wait()
+    print("[done]")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+from .model import (
+    chunked_ce_loss,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    logits_from_hidden,
+    param_count_exact,
+)

@@ -1,0 +1,452 @@
+"""Shared neural layers: norms, RoPE, GQA attention (full / windowed /
+bidirectional, logit softcap, qk-norm), gated MLP, and MoE with local
+sort-based dispatch.
+
+All functions are pure: ``params`` pytrees in, arrays out.  Sharding is
+expressed through ``repro.dist.context.constrain`` with logical axis names,
+so the same code runs unsharded in unit tests and SPMD-partitioned in the
+dry-run/train paths.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.dist.context import constrain
+
+Params = Any
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(key, fan_in, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) / math.sqrt(fan_in)).astype(dtype)
+
+
+def init_attention(key, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    p = {
+        "ln": jnp.ones((d,), dtype),
+        "wq": _dense_init(ks[0], d, (d, cfg.q_dim), dtype),
+        "wk": _dense_init(ks[1], d, (d, cfg.kv_dim), dtype),
+        "wv": _dense_init(ks[2], d, (d, cfg.kv_dim), dtype),
+        "wo": _dense_init(ks[3], cfg.q_dim, (cfg.q_dim, d), dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((cfg.head_dim,), dtype)
+        p["k_norm"] = jnp.ones((cfg.head_dim,), dtype)
+    return p
+
+
+def init_mlp(key, cfg: ModelConfig, dtype) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "ln": jnp.ones((d,), dtype),
+        "w_gate": _dense_init(ks[0], d, (d, f), dtype),
+        "w_up": _dense_init(ks[1], d, (d, f), dtype),
+        "w_down": _dense_init(ks[2], f, (f, d), dtype),
+    }
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> Params:
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "ln": jnp.ones((d,), dtype),
+        "router": _dense_init(ks[0], d, (d, e), jnp.float32),  # router kept fp32
+        "w_gate": _dense_init(ks[1], d, (e, d, f), dtype),
+        "w_up": _dense_init(ks[2], d, (e, d, f), dtype),
+        "w_down": _dense_init(ks[3], f, (e, f, d), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# basic ops
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps: float):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def softcap(x, cap: float):
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+def act_fn(x, kind: str):
+    return jax.nn.silu(x) if kind == "silu" else jax.nn.gelu(x)
+
+
+def rope(x, positions, theta: float):
+    """Rotary embedding; x: [B, S, H, hd], positions: [B, S] int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq  # [B, S, half]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _attn_mask(pos_q, pos_kv, kind: str, window: int):
+    """[B, Sq, Skv] boolean mask. pos_kv < 0 marks invalid cache slots."""
+    valid = (pos_kv >= 0)[:, None, :]
+    if kind == "bidir":
+        return valid
+    causal = pos_q[:, :, None] >= pos_kv[:, None, :]
+    if kind == "local" and window:
+        causal &= pos_q[:, :, None] - pos_kv[:, None, :] < window
+    return causal & valid
+
+
+def _sdpa(q, k, v, mask, cap: float):
+    """q: [B,Sq,Hkv,G,hd]; k/v: [B,Skv,Hkv,hd]; mask: [B,Sq,Skv]."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", q, k, preferred_element_type=jnp.float32)
+    scores = softcap(scores * scale, cap)
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhgqk,bkhd->bqhgd", w, v)
+
+
+def _sdpa_blocked(q, k, v, pos_q, pos_kv, kind, window, cap: float, kv_block: int = 1024):
+    """Online-softmax attention, scanning KV blocks (long-sequence path).
+
+    Bounds the transient score tensor to [B,H,G,Sq,kv_block] -- the jnp
+    realisation of flash attention for the 32k/500k shapes.
+    """
+    b, sq, hkv, g, hd = q.shape
+    skv = k.shape[1]
+    nblk = skv // kv_block
+    scale = 1.0 / math.sqrt(hd)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        kb, vb, pb = blk  # [B, C, Hkv, hd], [B, C, Hkv, hd], [B, C]
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", q, kb, preferred_element_type=jnp.float32)
+        s = softcap(s * scale, cap)
+        mask = _attn_mask(pos_q, pb, kind, window)
+        s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p.astype(vb.dtype), vb
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    # recompute block internals in backward: without this the scan saves the
+    # [.., Sq, kv_block] score tensors of every block as residuals
+    body = jax.checkpoint(body, prevent_cse=False)
+
+    kb = k.reshape(b, nblk, kv_block, hkv, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nblk, kv_block, hkv, hd).transpose(1, 0, 2, 3, 4)
+    pb = pos_kv.reshape(b, nblk, kv_block).transpose(1, 0, 2)
+    m0 = jnp.full((b, hkv, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, pb))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 3, 1, 2, 4).astype(v.dtype)  # [B,Sq,Hkv,G,hd]
+
+
+# use online-softmax blocked attention from this sequence length up: the
+# dense [B,H,G,S,S] fp32 score transient is the dominant train memory term
+BLOCKED_ATTN_THRESHOLD = 4096
+
+
+def attention(x, p, cfg: ModelConfig, kind: str, positions, kv_cache=None, cache_pos=None):
+    """Self-attention sub-block.  Returns (out, new_kv) where new_kv is the
+    (k, v) to cache: full for train/prefill, updated cache for decode."""
+    b, s, d = x.shape
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    q = (h @ p["wq"]).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = (h @ p["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = (h @ p["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    g = cfg.n_heads // cfg.n_kv_heads
+    # Head sharding for GQA: when kv_heads < TP degree but q_heads divide it,
+    # repeat K/V to full heads for the *compute* (same FLOPs) so the score
+    # tensor shards over 'model' on the head dim -- otherwise XLA replicates
+    # the [B,H,G,S,S] transient (the dominant memory term; EXPERIMENTS.md Perf).
+    from repro.dist.context import axis_size
+
+    k_cacheable, v_cacheable = k, v  # pre-repeat (cache stores true kv heads)
+    tp = axis_size("model")
+    if (
+        kv_cache is None
+        and g > 1
+        and cfg.n_kv_heads % tp != 0
+        and cfg.n_heads % tp == 0
+    ):
+        k = constrain(jnp.repeat(k, g, axis=2), "batch", None, "heads", None)
+        v = constrain(jnp.repeat(v, g, axis=2), "batch", None, "heads", None)
+        qg = q.reshape(b, s, cfg.n_heads, 1, cfg.head_dim)
+    else:
+        qg = q.reshape(b, s, cfg.n_kv_heads, g, cfg.head_dim)
+    qg = constrain(qg, "batch", None, "heads", None, None)
+
+    if kv_cache is not None:  # decode: append then attend against the cache
+        ck, cv, cpos = kv_cache  # [B, Sc, Hkv, hd] x2, [B, Sc] positions (-1 empty)
+        slot = cache_pos % ck.shape[1]  # ring buffer (bounded for local layers)
+        if jnp.ndim(cache_pos) == 0:
+            # homogeneous batch position: dynamic-update-slice, which GSPMD
+            # partitions natively even with the cache sequence dim sharded
+            ck = jax.lax.dynamic_update_slice(ck, k, (0, slot, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v, (0, slot, 0, 0))
+            cpos = jax.lax.dynamic_update_slice(cpos, positions, (0, slot))
+        else:
+            # per-slot positions (serving engine): scatter writes
+            rows = jnp.arange(b)
+            ck = ck.at[rows, slot].set(k[:, 0])
+            cv = cv.at[rows, slot].set(v[:, 0])
+            cpos = cpos.at[rows, slot].set(positions[:, 0])
+        ck = constrain(ck, "batch", "kv_seq", None, None)
+        cv = constrain(cv, "batch", "kv_seq", None, None)
+        mask = _attn_mask(positions, cpos, kind, cfg.window)
+        out = _sdpa(qg, ck, cv, mask, cfg.attn_softcap)
+        new_cache = (ck, cv, cpos)
+    else:
+        pos_kv = positions
+        if s >= BLOCKED_ATTN_THRESHOLD:
+            out = _sdpa_blocked(qg, k, v, positions, pos_kv, kind, cfg.window, cfg.attn_softcap)
+        else:
+            mask = _attn_mask(positions, pos_kv, kind, cfg.window)
+            out = _sdpa(qg, k, v, mask, cfg.attn_softcap)
+        new_cache = (k_cacheable, v_cacheable, pos_kv)
+    out = out.reshape(b, s, cfg.q_dim)
+    out = out @ p["wo"]
+    return constrain(out, "batch", "seq", None), new_cache
+
+
+def embedding_lookup(table, tokens):
+    """Vocab-parallel embedding gather.
+
+    With the table vocab-sharded over 'model', a plain jnp.take makes GSPMD
+    replicate the [B,S,D] gather output ("involuntary full rematerialization").
+    Instead each model shard gathers its local rows (out-of-range tokens
+    masked to zero) and the partial outputs psum over 'model' -- the classic
+    Megatron vocab-parallel embedding.  Falls back to jnp.take when no mesh
+    is active or the vocab does not divide the TP degree.
+    """
+    from repro.dist.context import get_rules
+
+    rules = get_rules()
+    v = table.shape[0]
+    if rules is None:
+        return jnp.take(table, tokens, axis=0)
+    from jax.sharding import PartitionSpec as P
+
+    mesh = rules.mesh
+    tp = rules.model_axis
+    tp_size = dict(zip(mesh.axis_names, mesh.devices.shape)).get(tp, 1)
+    if tp_size == 1 or v % tp_size != 0:
+        return jnp.take(table, tokens, axis=0)
+    batch_axes = tuple(a for a in rules.batch_axes if a in mesh.axis_names)
+    dp = int(np.prod([dict(zip(mesh.axis_names, mesh.devices.shape))[a] for a in batch_axes])) if batch_axes else 1
+    bspec = batch_axes if (batch_axes and tokens.shape[0] % dp == 0) else None
+    rows = v // tp_size
+
+    def local(tbl, tok):
+        off = jax.lax.axis_index(tp) * rows
+        idx = tok - off
+        ok = (idx >= 0) & (idx < rows)
+        local_rows = jnp.take(tbl, jnp.clip(idx, 0, rows - 1), axis=0)
+        out = jnp.where(ok[..., None], local_rows, jnp.zeros_like(local_rows))
+        return jax.lax.psum(out, tp)
+
+    fn = jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(tp, None), P(bspec, None)),
+        out_specs=P(bspec, None, None),
+        check_vma=False,
+    )
+    return fn(table, tokens)
+
+
+# ---------------------------------------------------------------------------
+# dense MLP and MoE
+# ---------------------------------------------------------------------------
+
+
+def mlp(x, p, cfg: ModelConfig):
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    gate = act_fn(h @ p["w_gate"], cfg.act)
+    up = h @ p["w_up"]
+    hidden = constrain(gate * up, "batch", None, "ff")
+    return constrain(hidden @ p["w_down"], "batch", "seq", None)
+
+
+def moe_dispatch_local(tokens, router, w_gate, w_up, w_down, cfg: ModelConfig, tp_axis=None):
+    """Sort-based top-k dispatch with capacity, entirely shard-local.
+
+    tokens: [T, D].  Routes each token to its top_k experts, packs tokens
+    into [E, C, D] capacity buffers via a rank-within-expert computed from
+    an argsort over expert ids (tokens past capacity are dropped, standard
+    Switch-style), runs the expert GEMMs (ff dim TP-sharded when running
+    under shard_map; ``tp_axis`` names the axis to psum partial down-proj
+    sums over), and combines with router weights.
+    """
+    t, d = tokens.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = min(int(math.ceil(cfg.capacity_factor * t * k / e)), t)
+    # router matmul in the compute dtype (casting the [T,D] tokens to f32
+    # makes XLA hoist the convert above the dispatch gather and run the whole
+    # expert GEMM chain in f32 -- 2x memory and FLOPs); softmax in f32
+    router_logits = (tokens @ router.astype(tokens.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    top_p, top_ids = jax.lax.top_k(probs, k)  # [T, k]
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    flat_ids = top_ids.reshape(-1)  # [T*k], slot-major per token
+    order = jnp.argsort(flat_ids, stable=True)
+    sorted_expert = flat_ids[order]
+    # rank within expert: position among all (token, slot) pairs of that expert
+    same = jnp.cumsum(jax.nn.one_hot(sorted_expert, e, dtype=jnp.int32), axis=0)
+    rank_sorted = jnp.take_along_axis(same, sorted_expert[:, None], axis=1)[:, 0] - 1
+    rank = jnp.zeros((t * k,), jnp.int32).at[order].set(rank_sorted)
+    keep = rank < cap
+    slot = jnp.where(keep, flat_ids * cap + rank, e * cap).reshape(t, k)
+
+    # Fill the [E, C, D] capacity buffer by GATHER, not scatter: scatter the
+    # cheap int32 token index per slot, then gather rows once.  k sequential
+    # [E*C, D] scatter copies were the dominant MoE memory term (see
+    # EXPERIMENTS.md Perf); the gather's backward is a single scatter-add.
+    inv = jnp.full((e * cap + 1,), t, jnp.int32)  # sentinel -> zero row
+    inv = inv.at[slot.reshape(-1)].set(jnp.arange(t * k, dtype=jnp.int32) // k)
+    tok_pad = jnp.concatenate([tokens, jnp.zeros((1, d), tokens.dtype)], axis=0)
+    buf = jnp.take(tok_pad, inv[: e * cap], axis=0).reshape(e, cap, d)
+
+    gate = act_fn(jnp.einsum("ecd,edf->ecf", buf, w_gate), cfg.act)
+    up = jnp.einsum("ecd,edf->ecf", buf, w_up)
+    expert_out = jnp.einsum("ecf,efd->ecd", gate * up, w_down)
+    if tp_axis is not None:  # partial sums over the TP-sharded ff dim
+        expert_out = jax.lax.psum(expert_out, tp_axis)
+
+    flat_out = jnp.concatenate(
+        [expert_out.reshape(e * cap, d), jnp.zeros((1, d), expert_out.dtype)], axis=0
+    )
+    # combine with ONE [T,k,D] gather (backward = one scatter-add); a k-loop
+    # of gathers left k live [E*C,D] gradient buffers (EXPERIMENTS.md Perf)
+    gathered = jnp.take(flat_out, slot.reshape(-1), axis=0).reshape(t, k, d)
+    out = jnp.einsum("tkd,tk->td", gathered, top_p.astype(expert_out.dtype))
+    # load-balancing auxiliary loss (Switch-style)
+    frac_tokens = jax.nn.one_hot(top_ids[:, 0], e, dtype=jnp.float32).mean(0)
+    aux = e * jnp.sum(frac_tokens * probs.mean(0))
+    return out, aux
+
+
+def moe(x, p, cfg: ModelConfig):
+    """MoE ffn.
+
+    Distributed path: shard_map over the mesh -- tokens stay shard-local for
+    the sort/dispatch (a global argsort under GSPMD would replicate the
+    dispatch buffers), expert ffn weights are TP-sharded on the ff dim with
+    a psum of the partial down-projections (Megatron-style TP within each
+    expert; works for any n_experts vs TP degree, unlike EP).
+    """
+    from repro.dist.context import get_rules
+
+    b, s, d = x.shape
+    x = rms_norm(x, p["ln"], cfg.norm_eps)  # pre-norm (as in the dense mlp)
+    rules = get_rules()
+    if rules is None:
+        tokens = x.reshape(b * s, d)
+        out, aux = moe_dispatch_local(
+            tokens, p["router"], p["w_gate"], p["w_up"], p["w_down"], cfg
+        )
+        return out.reshape(b, s, d), aux
+
+    from jax.sharding import PartitionSpec as P
+
+    mesh = rules.mesh
+    batch_axes = tuple(a for a in rules.batch_axes if a in mesh.axis_names)
+    tp = rules.model_axis
+    tp_size = dict(zip(mesh.axis_names, mesh.devices.shape)).get(tp, 1)
+    # tiny experts: TP-sharding moe_d_ff below one MXU tile per shard only
+    # buys a psum -- replicate the expert weights instead (they are small)
+    replicate_experts = cfg.moe_d_ff // max(tp_size, 1) < 128
+    mesh_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = int(np.prod([mesh_sizes[a] for a in batch_axes])) if batch_axes else 1
+    batch_spec = batch_axes if (batch_axes and b % dp == 0) else None
+
+    # expert-data-parallel: with replicated (tiny) experts, also shard the
+    # sequence over 'model' so each TP shard routes its own token slice --
+    # no psum, no redundant compute (falls back to replicated tokens when
+    # the sequence does not divide, e.g. decode)
+    seq_spec = tp if (replicate_experts and s % max(tp_size, 1) == 0) else None
+
+    def local_fn(xl, router, wg, wu, wd):
+        bl, sl, _ = xl.shape
+        tokens = xl.reshape(bl * sl, d)
+        eff_tp = None if replicate_experts else tp
+        nc = cfg.moe_token_chunk
+        if nc > 1 and (bl * sl) % nc == 0:
+            # scan over token chunks: peak dispatch buffers shrink by nc
+            # (capacity is enforced per chunk, as with expert parallelism)
+            chunks = tokens.reshape(nc, (bl * sl) // nc, d)
+
+            def body(carry, tc):
+                oc, ac = moe_dispatch_local(tc, router, wg, wu, wd, cfg, tp_axis=eff_tp)
+                return carry + ac, oc
+
+            body = jax.checkpoint(body, prevent_cse=False)
+            aux, out = jax.lax.scan(body, jnp.zeros((), jnp.float32), chunks)
+            out = out.reshape(bl * sl, d)
+            aux = aux / nc
+        else:
+            out, aux = moe_dispatch_local(tokens, router, wg, wu, wd, cfg, tp_axis=eff_tp)
+        axes = tuple(
+            a for a in ((batch_spec or ()) if isinstance(batch_spec, tuple)
+                        else ((batch_spec,) if batch_spec else ()))
+        ) + ((seq_spec,) if seq_spec else ())
+        if axes:
+            aux = jax.lax.pmean(aux, axes)
+        return out.reshape(bl, sl, d), aux
+
+    fn = jax.shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(
+            P(batch_spec, seq_spec, None),
+            P(None, None),
+            P(None, None, None if replicate_experts else tp),
+            P(None, None, None if replicate_experts else tp),
+            P(None, None if replicate_experts else tp, None),
+        ),
+        out_specs=(P(batch_spec, seq_spec, None), P()),
+        check_vma=False,
+    )
+    out, aux = fn(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+    return constrain(out, "batch", "seq", None), aux

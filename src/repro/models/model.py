@@ -1,0 +1,348 @@
+"""Unified multi-architecture LM.
+
+A model is a sequence of *layer groups*; each group is (pattern, repeats)
+and is executed with ``jax.lax.scan`` over stacked per-layer params -- HLO
+size and compile time are O(period), not O(n_layers).  The same block code
+serves train (no cache), prefill (emits caches) and decode (carries caches).
+
+Block kinds: attn / local / bidir (attention + dense-or-MoE ffn),
+rec (RG-LRU + ffn), rwkv (time mix + channel mix).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.context import constrain
+
+from . import layers as L
+from . import rglru as RG
+from . import rwkv6 as RW
+
+Params = Any
+
+_ATTN_KINDS = ("attn", "local", "bidir")
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, kind: str, cfg: ModelConfig, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    if kind in _ATTN_KINDS:
+        ffn = L.init_moe(k2, cfg, dtype) if cfg.moe else L.init_mlp(k2, cfg, dtype)
+        return {"attn": L.init_attention(k1, cfg, dtype), "ffn": ffn}
+    if kind == "rec":
+        return {"rec": RG.init_rglru(k1, cfg, dtype), "ffn": L.init_mlp(k2, cfg, dtype)}
+    if kind == "rwkv":
+        return {"rwkv": RW.init_rwkv(k1, cfg, dtype)}
+    raise ValueError(kind)
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32) -> Params:
+    keys = jax.random.split(key, 8)
+    d = cfg.d_model
+    params: dict = {
+        "embed": (
+            jax.random.normal(keys[0], (cfg.vocab_padded, d), jnp.float32) * 0.02
+        ).astype(dtype),
+        "final_norm": jnp.ones((d,), dtype),
+        "groups": [],
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(keys[1], (d, cfg.vocab_padded), jnp.float32) / math.sqrt(d)
+        ).astype(dtype)
+    if cfg.frontend != "none":
+        params["frontend_proj"] = (
+            jax.random.normal(keys[2], (cfg.frontend_dim, d), jnp.float32)
+            / math.sqrt(cfg.frontend_dim)
+        ).astype(dtype)
+    gkey = keys[3]
+    for pattern, reps in cfg.layer_groups():
+        gkey, sub = jax.random.split(gkey)
+        group = {}
+        for i, kind in enumerate(pattern):
+            sub, bk = jax.random.split(sub)
+            # stack `reps` independently-initialised layers along axis 0
+            bkeys = jax.random.split(bk, reps)
+            stacked = jax.vmap(lambda kk: _init_block(kk, kind, cfg, dtype))(bkeys)
+            group[f"b{i}"] = stacked
+        params["groups"].append(group)
+    return params
+
+
+def param_count_exact(cfg: ModelConfig) -> int:
+    shapes = jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    )
+    return int(sum(x.size for x in jax.tree.leaves(shapes)))
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+
+def _cache_len(kind: str, cfg: ModelConfig, max_seq: int) -> int:
+    if kind == "local" and cfg.window:
+        return min(cfg.window, max_seq)
+    return max_seq
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    """Decode cache pytree, mirroring the group structure."""
+    caches = []
+    for pattern, reps in cfg.layer_groups():
+        group = {}
+        for i, kind in enumerate(pattern):
+            if kind in _ATTN_KINDS:
+                sc = _cache_len(kind, cfg, max_seq)
+                group[f"b{i}"] = (
+                    jnp.zeros((reps, batch, sc, cfg.n_kv_heads, cfg.head_dim), dtype),
+                    jnp.zeros((reps, batch, sc, cfg.n_kv_heads, cfg.head_dim), dtype),
+                    jnp.full((reps, batch, sc), -1, jnp.int32),
+                )
+            elif kind == "rec":
+                group[f"b{i}"] = (
+                    jnp.zeros((reps, batch, cfg.rnn_width), jnp.float32),
+                    jnp.zeros((reps, batch, cfg.conv_width - 1, cfg.rnn_width), dtype),
+                )
+            elif kind == "rwkv":
+                group[f"b{i}"] = (
+                    jnp.zeros(
+                        (reps, batch, cfg.n_heads, cfg.head_dim, cfg.head_dim), jnp.float32
+                    ),
+                    jnp.zeros((reps, batch, cfg.d_model), dtype),
+                    jnp.zeros((reps, batch, cfg.d_model), dtype),
+                )
+        caches.append(group)
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+
+def _apply_block(x, bp, kind, cfg, positions, cache=None, cache_pos=None, aux=0.0):
+    if kind in _ATTN_KINDS:
+        a_out, kv = L.attention(
+            x, bp["attn"], cfg, kind, positions, kv_cache=cache, cache_pos=cache_pos
+        )
+        x = x + a_out
+        if cfg.moe:
+            f_out, a = L.moe(x, bp["ffn"], cfg)
+            aux = aux + a
+        else:
+            f_out = L.mlp(x, bp["ffn"], cfg)
+        return x + f_out, kv, aux
+    if kind == "rec":
+        r_out, st = RG.rglru_block(x, bp["rec"], cfg, state=cache)
+        x = x + r_out
+        return x + L.mlp(x, bp["ffn"], cfg), st, aux
+    if kind == "rwkv":
+        p = bp["rwkv"]
+        wkv_state, shift_t, shift_c = cache if cache is not None else (None, None, None)
+        t_out, wkv_state, shift_t = RW.time_mix(
+            x, p, cfg, state=wkv_state, shift_prev=shift_t, chunked=x.shape[1] > 1
+        )
+        x = x + t_out
+        c_out, shift_c = RW.channel_mix(x, p, cfg, shift_prev=shift_c)
+        return x + c_out, (wkv_state, shift_t, shift_c), aux
+    raise ValueError(kind)
+
+
+def _prep_train_cache(kind, cfg, kv, max_seq):
+    """Convert full-sequence block state into a decode cache slice (prefill)."""
+    if kind in _ATTN_KINDS:
+        k, v, pos = kv
+        sc = _cache_len(kind, cfg, max_seq)
+        s = k.shape[1]
+        if s >= sc:
+            # keep the last sc entries, rolled so that entry for position p
+            # sits at index p % sc -- decode's ring indexing then lines up
+            shift = s % sc
+            return (
+                jnp.roll(k[:, -sc:], shift, axis=1),
+                jnp.roll(v[:, -sc:], shift, axis=1),
+                jnp.roll(jnp.broadcast_to(pos, k.shape[:2])[:, -sc:], shift, axis=1),
+            )
+        pad = sc - s
+        return (
+            jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            jnp.pad(jnp.broadcast_to(pos, k.shape[:2]), ((0, 0), (0, pad)), constant_values=-1),
+        )
+    return kv
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch: dict, dtype):
+    """tokens (+ stub frontend features) -> initial hidden states [B,S,D]."""
+    parts = []
+    if cfg.frontend == "audio":
+        x = batch["features"].astype(dtype) @ params["frontend_proj"]
+        return x
+    if cfg.frontend == "vision":
+        patches = batch["patches"].astype(dtype) @ params["frontend_proj"]
+        parts.append(patches)
+    tok = L.embedding_lookup(params["embed"], batch["tokens"])
+    if cfg.scale_embed:
+        tok = tok * math.sqrt(cfg.d_model)
+    parts.append(tok)
+    return jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
+
+
+def forward(
+    params,
+    cfg: ModelConfig,
+    batch: dict,
+    *,
+    mode: str = "train",  # train | prefill
+    remat: bool = False,
+    remat_policy: str = "full",
+    compute_dtype=None,
+    max_seq: int | None = None,
+):
+    """Full-sequence pass.  Returns (hidden [B,S,D], caches-or-None, aux)."""
+    x = _embed_inputs(params, cfg, batch, compute_dtype or params["embed"].dtype)
+    b, s, _ = x.shape
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = constrain(x, "batch", "seq", None)
+    max_seq = max_seq or s
+    caches = [] if mode == "prefill" else None
+    aux_total = jnp.zeros((), jnp.float32)
+
+    for gi, (pattern, reps) in enumerate(cfg.layer_groups()):
+        gp = params["groups"][gi]
+
+        def body(carry, layer_params, _pattern=pattern):
+            x, aux = carry
+            cache_out = {}
+            for i, kind in enumerate(_pattern):
+                x, kv, aux = _apply_block(x, layer_params[f"b{i}"], kind, cfg, positions, aux=aux)
+                if mode == "prefill":
+                    cache_out[f"b{i}"] = _prep_train_cache(kind, cfg, kv, max_seq)
+            return (x, aux), (cache_out if mode == "prefill" else 0)
+
+        if remat:
+            policy = (
+                jax.checkpoint_policies.checkpoint_dots
+                if remat_policy == "dots"
+                else None
+            )
+            body = jax.checkpoint(body, prevent_cse=False, policy=policy)
+        (x, aux_total), ys = jax.lax.scan(body, (x, aux_total), gp)
+        if mode == "prefill":
+            caches.append(ys)
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, caches, aux_total
+
+
+def _mask_pad_vocab(logits, cfg: ModelConfig):
+    if cfg.vocab_padded == cfg.vocab:
+        return logits
+    col = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    return jnp.where(col < cfg.vocab, logits, L.NEG_INF)
+
+
+def logits_from_hidden(params, cfg: ModelConfig, h):
+    """Logits over the padded vocab; padded columns are masked to -inf
+    (argmax/softmax then never select them).  Width = cfg.vocab_padded."""
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (h @ w).astype(jnp.float32)
+    logits = L.softcap(logits, cfg.logit_softcap)
+    return constrain(_mask_pad_vocab(logits, cfg), "batch", None, "vocab")
+
+
+def chunked_ce_loss(params, cfg: ModelConfig, h, labels, mask=None, chunk: int = 1024):
+    """Cross-entropy over the vocab without materialising [B,S,V] at once."""
+    b, s, d = h.shape
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    chunk = min(chunk, s)
+    n = s // chunk
+    rem = s - n * chunk
+    if mask is None:
+        mask = jnp.ones((b, s), jnp.float32)
+
+    def chunk_loss(hc, lc, mc):
+        logits = L.softcap((hc @ w).astype(jnp.float32), cfg.logit_softcap)
+        logits = constrain(_mask_pad_vocab(logits, cfg), "batch", None, "vocab")
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return jnp.sum((logz - ll) * mc), jnp.sum(mc)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        hc, lc, mc = xs
+        l, c = chunk_loss(hc, lc, mc)
+        return (tot + l, cnt + c), 0
+
+    # save only the scan carry for backward; the fp32 logits of every chunk
+    # would otherwise be stored as scan residuals (dominant loss-memory term)
+    body = jax.checkpoint(body, prevent_cse=False)
+
+    hc = h[:, : n * chunk].reshape(b, n, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels[:, : n * chunk].reshape(b, n, chunk).transpose(1, 0, 2)
+    mc = mask[:, : n * chunk].reshape(b, n, chunk).transpose(1, 0, 2)
+    (tot, cnt), _ = jax.lax.scan(body, (0.0, 0.0), (hc, lc, mc))
+    if rem:
+        l, c = chunk_loss(h[:, n * chunk :], labels[:, n * chunk :], mask[:, n * chunk :])
+        tot, cnt = tot + l, cnt + c
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def decode_step(params, cfg: ModelConfig, caches, tokens, pos):
+    """One decode step.  tokens: [B, 1]; pos: scalar or per-slot [B] int32.
+
+    Returns (logits [B, 1, V], new caches).
+    """
+    x = L.embedding_lookup(params["embed"], tokens)
+    if cfg.scale_embed:
+        x = x * math.sqrt(cfg.d_model)
+    b = tokens.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = jnp.broadcast_to(
+        pos[:, None] if pos.ndim else pos[None, None], (b, 1)
+    ).astype(jnp.int32)
+    x = constrain(x, "batch", None, None)
+    new_caches = []
+    for gi, (pattern, reps) in enumerate(cfg.layer_groups()):
+        gp = params["groups"][gi]
+        gc = caches[gi]
+
+        def body(x, scanned, _pattern=pattern):
+            layer_params, layer_cache = scanned
+            cache_out = {}
+            for i, kind in enumerate(_pattern):
+                x, st, _ = _apply_block(
+                    x,
+                    layer_params[f"b{i}"],
+                    kind,
+                    cfg,
+                    positions,
+                    cache=layer_cache[f"b{i}"],
+                    cache_pos=pos,
+                )
+                cache_out[f"b{i}"] = st
+            return x, cache_out
+
+        x, ys = jax.lax.scan(body, x, (gp, gc))
+        new_caches.append(ys)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return logits_from_hidden(params, cfg, x), new_caches

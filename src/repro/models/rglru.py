@@ -1,0 +1,96 @@
+"""RecurrentGemma / Griffin recurrent block: RG-LRU + causal temporal conv.
+
+    h_t = a_t . h_{t-1} + sqrt(1 - a_t^2) . (i_t . xi_t)
+    a_t = exp(-c * softplus(Lambda) * sigmoid(W_a xi_t))        (c = 8)
+
+The diagonal linear recurrence is evaluated with ``jax.lax.associative_scan``
+(log-depth, TPU-parallel) -- the natural TPU mapping of the paper-orthogonal
+RG-LRU mixer.  Decode carries (h, conv window) state.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.context import constrain
+
+_C = 8.0
+
+
+def init_rglru(key, cfg: ModelConfig, dtype):
+    d, w = cfg.d_model, cfg.rnn_width
+    ks = jax.random.split(key, 6)
+
+    def dense(k, fi, shape):
+        return (jax.random.normal(k, shape, jnp.float32) / math.sqrt(fi)).astype(dtype)
+
+    # Lambda init so a^c in (0.9, 0.999) at sigmoid ~ 0.5 (Griffin appendix)
+    u = jax.random.uniform(ks[5], (w,), jnp.float32, 0.9**2, 0.999**2)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))
+    return {
+        "ln": jnp.ones((d,), dtype),
+        "w_x": dense(ks[0], d, (d, w)),
+        "w_y": dense(ks[1], d, (d, w)),
+        "conv_w": dense(ks[2], cfg.conv_width, (cfg.conv_width, w)),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_a": dense(ks[3], w, (w, w)),
+        "w_i": dense(ks[4], w, (w, w)),
+        "lambda": lam,
+        "w_o": dense(ks[0], w, (w, d)),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv, width cw.  state: [B, cw-1, W] trailing inputs."""
+    cw = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], cw - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(cw))
+    new_state = xp[:, -(cw - 1) :, :]
+    return out + b, new_state
+
+
+def rglru_block(x, p, cfg: ModelConfig, state=None):
+    """x: [B,S,D] -> (out [B,S,D], (h, conv) state)."""
+    b, s, d = x.shape
+    from .layers import rms_norm
+
+    h_state, conv_state = state if state is not None else (None, None)
+    xin = rms_norm(x, p["ln"], cfg.norm_eps)
+    branch = xin @ p["w_x"]
+    gate = jax.nn.gelu(xin @ p["w_y"])
+    xi, conv_state = _causal_conv(branch, p["conv_w"], p["conv_b"], conv_state)
+    xi = constrain(xi, "batch", None, "ff")
+
+    r = jax.nn.sigmoid((xi @ p["w_a"]).astype(jnp.float32))
+    ig = jax.nn.sigmoid((xi @ p["w_i"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lambda"]) * r  # [B,S,W], < 0
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
+        ig * xi.astype(jnp.float32)
+    )
+
+    if h_state is None:
+        h_state = jnp.zeros((b, xi.shape[-1]), jnp.float32)
+    if s == 1:  # decode step
+        h = a[:, 0] * h_state + gated[:, 0]
+        hidden = h[:, None, :]
+        new_h = h
+    else:
+        # prepend carry as position 0 contribution: h_0 = a_0 h_prev + b_0
+        gated = gated.at[:, 0, :].add(a[:, 0] * h_state)
+
+        def op(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        _, hidden = jax.lax.associative_scan(op, (a, gated), axis=1)
+        new_h = hidden[:, -1, :]
+
+    out = (hidden.astype(x.dtype) * gate) @ p["w_o"]
+    return constrain(out, "batch", "seq", None), (new_h, conv_state)

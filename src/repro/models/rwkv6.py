@@ -1,0 +1,192 @@
+"""RWKV6 ("Finch") block: data-dependent-decay linear attention.
+
+Math (per head, k-dim i, v-dim j):
+    o_t = r_t . (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T ,   w_t = exp(-exp(d_t))  in (0,1)
+
+Two interchangeable evaluation paths:
+  * ``wkv_scan``   -- exact per-token lax.scan (oracle + decode step)
+  * ``wkv_chunked``-- chunk-parallel matmul form (training path).  All decay
+    factors appear as exp(differences of log-decay cumsums) <= 1, so it is
+    stable for arbitrary decays; the [L, L, hd] decay tensor is materialised
+    per chunk (chunk 32 keeps it small) and FLOPs stay linear in sequence.
+
+TPU note: the chunked form is the MXU-friendly formulation (batched [L,hd]
+matmuls); the paper's technique does not apply to this attention-free mixer
+(DESIGN.md Arch-applicability).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.context import constrain
+
+LORA_DIM = 32
+
+
+def init_rwkv(key, cfg: ModelConfig, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    h, hd = cfg.n_heads, cfg.head_dim
+    ks = jax.random.split(key, 12)
+
+    def dense(k, fi, shape):
+        return (jax.random.normal(k, shape, jnp.float32) / math.sqrt(fi)).astype(dtype)
+
+    return {
+        "ln_t": jnp.ones((d,), dtype),
+        "mu_x": jnp.zeros((5, d), dtype),  # per-(w,k,v,r,g) static interpolation
+        "mix_A": dense(ks[0], d, (d, 5 * LORA_DIM)),
+        "mix_B": dense(ks[1], LORA_DIM, (5, LORA_DIM, d)),
+        "w_bias": jnp.full((d,), -1.0, dtype),
+        "w_A": dense(ks[2], d, (d, LORA_DIM * 2)),
+        "w_B": dense(ks[3], LORA_DIM * 2, (LORA_DIM * 2, d)),
+        "wr": dense(ks[4], d, (d, d)),
+        "wk": dense(ks[5], d, (d, d)),
+        "wv": dense(ks[6], d, (d, d)),
+        "wg": dense(ks[7], d, (d, d)),
+        "wo": dense(ks[8], d, (d, d)),
+        "u": jnp.zeros((h, hd), dtype),
+        "ln_x": jnp.ones((d,), dtype),
+        # channel mix
+        "ln_c": jnp.ones((d,), dtype),
+        "mu_ck": jnp.zeros((d,), dtype),
+        "mu_cr": jnp.zeros((d,), dtype),
+        "ck": dense(ks[9], d, (d, f)),
+        "cv": dense(ks[10], f, (f, d)),
+        "cr": dense(ks[11], d, (d, d)),
+    }
+
+
+def _token_shift(x, prev):
+    """shift(x)_t = x_{t-1}; position 0 takes ``prev`` (decode carry)."""
+    shifted = jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+    return shifted
+
+
+def wkv_scan(r, k, v, logw, u, state):
+    """Exact recurrence. r/k/v/logw: [B,S,H,hd]; u: [H,hd]; state: [B,H,hd,hd]."""
+
+    def step(s, inp):
+        rt, kt, vt, lwt = inp  # [B,H,hd]
+        kv = kt[..., :, None] * vt[..., None, :]  # [B,H,hd_k,hd_v]
+        ot = jnp.einsum("bhi,bhij->bhj", rt, s + u[None, :, :, None] * kv)
+        s = jnp.exp(lwt)[..., :, None] * s + kv
+        return s, ot
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, logw))
+    state, out = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(out, 0, 1).astype(r.dtype), state  # [B,S,H,hd_v]
+
+
+def wkv_chunked(r, k, v, logw, u, state, chunk: int = 32):
+    """Chunk-parallel form; matches wkv_scan (see tests/test_rwkv.py)."""
+    b, s, h, hd = r.shape
+    pad = (-s) % chunk
+    if pad:
+        z = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = z(r), z(k), z(v)
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n = r.shape[1] // chunk
+    resh = lambda a: a.reshape(b, n, chunk, h, hd).transpose(1, 0, 3, 2, 4)
+    rc, kc, vc, lwc = resh(r), resh(k), resh(v), resh(logw.astype(jnp.float32))
+    # rc etc: [n, B, H, L, hd]
+
+    def body(carry, inp):
+        s0 = carry  # [B,H,hd,hd] fp32
+        rt, kt, vt, lw = inp
+        cs = jnp.cumsum(lw, axis=-2)  # [B,H,L,hd], inclusive
+        cs_prev = cs - lw  # cs_{t-1}
+        # inter-chunk: r_t exp(cs_{t-1}) @ S0
+        r_dec = rt.astype(jnp.float32) * jnp.exp(cs_prev)
+        o_inter = jnp.einsum("bhti,bhij->bhtj", r_dec, s0)
+        # intra-chunk: decay tensor exp(cs_{t-1} - cs_s), s <= t-1 (else 0)
+        diff = cs_prev[..., :, None, :] - cs[..., None, :, :]  # [B,H,t,s,hd]
+        tri = jnp.tril(jnp.ones((chunk, chunk), jnp.bool_), k=-1)
+        # mask BEFORE exp: above-diagonal diffs are positive and would inf
+        dec = jnp.exp(jnp.where(tri[None, None, :, :, None], diff, -jnp.inf))
+        scores = jnp.einsum(
+            "bhti,bhsi,bhtsi->bhts", rt.astype(jnp.float32), kt.astype(jnp.float32), dec
+        )
+        diag = jnp.einsum("bhti,bhti,hi->bht", rt.astype(jnp.float32),
+                          kt.astype(jnp.float32), u.astype(jnp.float32))
+        scores = scores + jnp.eye(chunk, dtype=jnp.float32)[None, None] * diag[..., None]
+        o_intra = jnp.einsum("bhts,bhsj->bhtj", scores, vt.astype(jnp.float32))
+        # state to next chunk: exp(cs_L) S0 + sum_s exp(cs_L - cs_s) k_s v_s^T
+        cs_last = cs[..., -1:, :]
+        k_dec = kt.astype(jnp.float32) * jnp.exp(cs_last - cs)
+        s_new = jnp.exp(cs_last[..., 0, :])[..., :, None] * s0 + jnp.einsum(
+            "bhsi,bhsj->bhij", k_dec, vt.astype(jnp.float32)
+        )
+        return s_new, (o_inter + o_intra)
+
+    body = jax.checkpoint(body, prevent_cse=False)  # recompute chunk internals
+    state, out = jax.lax.scan(body, state.astype(jnp.float32), (rc, kc, vc, lwc))
+    out = out.transpose(1, 0, 3, 2, 4).reshape(b, n * chunk, h, hd)
+    return out[:, :s].astype(r.dtype), state
+
+
+def _group_norm(x, scale, eps):
+    """Per-head normalisation of the wkv output (RWKV's GroupNorm)."""
+    b, s, h, hd = x.shape
+    xf = x.astype(jnp.float32)
+    mean = xf.mean(-1, keepdims=True)
+    var = ((xf - mean) ** 2).mean(-1, keepdims=True)
+    out = (xf - mean) * jax.lax.rsqrt(var + eps)
+    return (out.reshape(b, s, h * hd) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def time_mix(x, p, cfg: ModelConfig, state=None, shift_prev=None, chunked=True):
+    """RWKV6 time mixing. state: [B,H,hd,hd] fp32; shift_prev: [B,D]."""
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    xin = rms_norm_local(x, p["ln_t"], cfg.norm_eps)
+    if shift_prev is None:
+        shift_prev = jnp.zeros((b, d), xin.dtype)
+    xx = _token_shift(xin, shift_prev) - xin
+    xxx = xin + xx * p["mu_x"].astype(xin.dtype).sum(0) / 5.0
+    m = jnp.tanh(xxx @ p["mix_A"]).reshape(b, s, 5, LORA_DIM)
+    deltas = jnp.einsum("bsli,lid->bsld", m, p["mix_B"].astype(xin.dtype))
+    mixed = [
+        xin + xx * (p["mu_x"][i].astype(xin.dtype) + deltas[:, :, i, :]) for i in range(5)
+    ]
+    xw, xk, xv, xr, xg = mixed
+    dlog = p["w_bias"].astype(jnp.float32) + (
+        jnp.tanh(xw @ p["w_A"]) @ p["w_B"]
+    ).astype(jnp.float32)
+    logw = -jnp.exp(dlog)  # log decay, < 0
+    r = (xr @ p["wr"]).reshape(b, s, h, hd)
+    k = (xk @ p["wk"]).reshape(b, s, h, hd)
+    v = (xv @ p["wv"]).reshape(b, s, h, hd)
+    g = jax.nn.silu(xg @ p["wg"])
+    logw = logw.reshape(b, s, h, hd)
+    if state is None:
+        state = jnp.zeros((b, h, hd, hd), jnp.float32)
+    fn = wkv_chunked if (chunked and s > 1) else wkv_scan
+    out, state = fn(r, k, v, logw, p["u"], state)
+    out = _group_norm(out, p["ln_x"], cfg.norm_eps).astype(xin.dtype)
+    out = (out * g) @ p["wo"]
+    new_shift = xin[:, -1, :]
+    return constrain(out, "batch", "seq", None), state, new_shift
+
+
+def channel_mix(x, p, cfg: ModelConfig, shift_prev=None):
+    b, s, d = x.shape
+    xin = rms_norm_local(x, p["ln_c"], cfg.norm_eps)
+    if shift_prev is None:
+        shift_prev = jnp.zeros((b, d), xin.dtype)
+    xx = _token_shift(xin, shift_prev) - xin
+    xk = xin + xx * p["mu_ck"].astype(xin.dtype)
+    xr = xin + xx * p["mu_cr"].astype(xin.dtype)
+    kk = jnp.square(jax.nn.relu(xk @ p["ck"]))
+    out = jax.nn.sigmoid(xr @ p["cr"]) * (kk @ p["cv"])
+    return constrain(out, "batch", "seq", None), xin[:, -1, :]
+
+
+def rms_norm_local(x, scale, eps):
+    from .layers import rms_norm
+
+    return rms_norm(x, scale, eps)

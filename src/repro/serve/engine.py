@@ -1,0 +1,118 @@
+"""Batched serving engine: continuous batching over a fixed slot pool.
+
+Slot occupancy is tracked as a *packed bitmap* and slot-selection queries
+(free slots, finished slots, slots past a length threshold) run through the
+paper's threshold/symmetric machinery -- the serving layer is a natural
+bitmap-index consumer (requests x predicates).
+
+The device-side decode is the jitted ``decode_step`` from the model zoo;
+prefill uses ``forward(mode='prefill')``.  Greedy sampling by default.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.bitmaps import from_positions, to_positions_np
+from repro.models import decode_step, forward, init_cache
+from repro.models.model import logits_from_hidden
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new: int = 16
+    out: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, batch_slots: int = 8, max_seq: int = 256):
+        assert not cfg.encoder_only, "encoder-only archs have no decode step"
+        self.cfg = cfg
+        self.params = params
+        self.slots = batch_slots
+        self.max_seq = max_seq
+        self.cache = init_cache(cfg, batch_slots, max_seq, jnp.float32)
+        self.requests: list[Request | None] = [None] * batch_slots
+        self.pos = np.zeros(batch_slots, np.int64)
+        self._decode = jax.jit(partial(decode_step, cfg=cfg))
+        self.step_count = 0
+
+    # -- slot bitmaps ----------------------------------------------------
+    def slot_bitmap(self, predicate: Callable[[Request | None], bool]):
+        idx = [i for i, r in enumerate(self.requests) if predicate(r)]
+        return from_positions(idx, self.slots)
+
+    def free_slots(self) -> list[int]:
+        return to_positions_np(self.slot_bitmap(lambda r: r is None)).tolist()
+
+    # -- admission ---------------------------------------------------------
+    def submit(self, req: Request) -> bool:
+        free = self.free_slots()
+        if not free:
+            return False
+        slot = free[0]
+        self.requests[slot] = req
+        toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        # per-slot prefill: run the prompt through the model, splice the
+        # resulting cache rows into this slot
+        _, caches, _ = forward(
+            self.params, self.cfg, {"tokens": toks}, mode="prefill", max_seq=self.max_seq
+        )
+        self.cache = jax.tree.map(
+            lambda full, new: full.at[:, slot : slot + 1].set(new), self.cache, caches
+        )
+        self.pos[slot] = len(req.prompt)
+        return True
+
+    # -- decode ------------------------------------------------------------
+    def step(self):
+        """One decode step for every active slot."""
+        active = [i for i, r in enumerate(self.requests) if r is not None and not r.done]
+        if not active:
+            return []
+        last = np.zeros((self.slots, 1), np.int32)
+        for i in active:
+            r = self.requests[i]
+            seq = r.prompt + r.out
+            last[i, 0] = seq[-1]
+        pos = jnp.asarray(self.pos, jnp.int32)  # per-slot positions
+        logits, self.cache = self._decode(
+            self.params, caches=self.cache, tokens=jnp.asarray(last), pos=pos
+        )
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        emitted = []
+        for i in active:
+            r = self.requests[i]
+            r.out.append(int(nxt[i]))
+            self.pos[i] += 1
+            emitted.append((r.rid, int(nxt[i])))
+            if len(r.out) >= r.max_new or self.pos[i] >= self.max_seq - 1:
+                r.done = True
+                self.requests[i] = None  # release slot
+        self.step_count += 1
+        return emitted
+
+    def run_until_drained(self, pending: list[Request], max_steps: int = 10_000):
+        done: list[Request] = []
+        live: dict[int, Request] = {}
+        while (pending or live) and max_steps:
+            max_steps -= 1
+            while pending and self.free_slots():
+                req = pending.pop(0)
+                if self.submit(req):
+                    live[req.rid] = req
+            self.step()
+            for rid, r in list(live.items()):
+                if r.done:
+                    done.append(r)
+                    del live[rid]
+        return done

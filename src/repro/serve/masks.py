@@ -1,0 +1,78 @@
+"""Attention-mask composition over packed bitmaps + KV-tile skip lists.
+
+The paper's machinery applied to serving: a decode step's attention mask is
+the conjunction/threshold of several *criteria bitmaps* over KV positions
+(causal validity, sliding window, same-document, not-padding, retrieval
+votes...).  Masks are packed uint32 rows (32 KV positions/word), composed
+with `core.threshold` / logical ops, and classified into clean/dirty tiles
+with `core.blockrle` -- all-zero tiles are skipped entirely by a
+block-sparse attention consumer (the skip decision is made host/launch
+side, the paper's EWAH fast-forward insight).
+
+`head_vote_mask` is the threshold showcase: K heads (or retrieval scorers)
+each nominate KV pages they consider important; a page is kept if >= T of
+them agree -- exactly a T-occurrence query over vote bitmaps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bitmaps import n_words_for, pack, unpack
+from repro.core.blockrle import classify_tiles
+from repro.core.threshold import threshold
+
+__all__ = [
+    "causal_mask_bitmap",
+    "window_mask_bitmap",
+    "document_mask_bitmap",
+    "compose_masks_all",
+    "head_vote_mask",
+    "kv_tile_skiplist",
+]
+
+
+def causal_mask_bitmap(q_pos: int, kv_positions) -> jax.Array:
+    """Packed mask over KV slots: kv position valid and <= q_pos."""
+    kv = jnp.asarray(kv_positions)
+    return pack((kv >= 0) & (kv <= q_pos))
+
+
+def window_mask_bitmap(q_pos: int, kv_positions, window: int) -> jax.Array:
+    kv = jnp.asarray(kv_positions)
+    return pack((kv >= 0) & (q_pos - kv < window))
+
+
+def document_mask_bitmap(doc_ids, q_doc: int) -> jax.Array:
+    return pack(jnp.asarray(doc_ids) == q_doc)
+
+
+def compose_masks_all(*masks) -> jax.Array:
+    """AND of criteria = theta(N, .) over the stacked mask bitmaps."""
+    stacked = jnp.stack(masks)
+    return threshold(stacked, stacked.shape[0], "ssum")
+
+
+def head_vote_mask(votes: jax.Array, t: int) -> jax.Array:
+    """KV pages nominated by >= t of the per-head vote bitmaps
+    (votes: uint32[n_heads, n_words])."""
+    return threshold(votes, t, "fused")
+
+
+def kv_tile_skiplist(mask_words: jax.Array, n_kv: int, tile_positions: int = 2048):
+    """Classify a packed mask into KV tiles; returns (keep_tiles, info).
+
+    keep_tiles: sorted indices of tiles with any live position -- the launch
+    list for a block-sparse attention kernel; all-zero tiles are never read.
+    """
+    tile_words = max(1, tile_positions // 32)
+    stats = classify_tiles(mask_words[None, :], tile_words=tile_words)
+    classes = stats.classes[0]
+    keep = np.nonzero(classes != 0)[0]
+    info = {
+        "n_tiles": int(classes.size),
+        "skipped_tiles": int((classes == 0).sum()),
+        "skip_fraction": float((classes == 0).mean()),
+    }
+    return keep, info

@@ -1,0 +1,2 @@
+from .optimizer import OptConfig, apply_updates, init_opt_state, schedule
+from .step import TrainConfig, init_train_state, make_eval_step, make_loss_fn, make_train_step

@@ -1,0 +1,108 @@
+"""Train-step builder: loss, grads, microbatch accumulation, AdamW update.
+
+The returned step is pure (state, batch) -> (state, metrics) and is jitted
+by the caller with shardings + donation (see launch/train.py, launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import chunked_ce_loss, forward
+
+from .optimizer import OptConfig, apply_updates, init_opt_state
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: OptConfig = OptConfig()
+    remat: bool = False
+    remat_policy: str = "full"  # full | dots (jax.checkpoint_policies.checkpoint_dots)
+    microbatches: int = 1
+    aux_coeff: float = 0.01
+    loss_chunk: int = 1024
+
+
+def init_train_state(model_cfg: ModelConfig, key, param_dtype=jnp.float32):
+    from repro.models import init_params
+
+    params = init_params(model_cfg, key, param_dtype)
+    return {"params": params, "opt": init_opt_state(params)}
+
+
+def make_loss_fn(model_cfg: ModelConfig, train_cfg: TrainConfig):
+    def loss_fn(params, batch):
+        h, _, aux = forward(
+            params, model_cfg, batch, mode="train", remat=train_cfg.remat,
+            remat_policy=train_cfg.remat_policy,
+        )
+        mask = batch.get("mask")
+        loss = chunked_ce_loss(
+            params, model_cfg, h, batch["labels"], mask, chunk=train_cfg.loss_chunk
+        )
+        total = loss + train_cfg.aux_coeff * aux
+        return total, {"loss": loss, "aux_loss": aux}
+
+    return loss_fn
+
+
+def make_train_step(model_cfg: ModelConfig, train_cfg: TrainConfig):
+    loss_fn = make_loss_fn(model_cfg, train_cfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def single(params, batch):
+        (total, metrics), grads = grad_fn(params, batch)
+        return grads, {**metrics, "total_loss": total}
+
+    def accumulate(params, batch):
+        """Split the global batch into microbatches and scan-accumulate.
+
+        XLA overlaps microbatch i+1's compute with microbatch i's gradient
+        reduce-scatter (the standard comm/compute overlap trick).
+        """
+        m = train_cfg.microbatches
+
+        def resh(x):
+            return x.reshape((m, x.shape[0] // m) + x.shape[1:])
+
+        micro = jax.tree.map(resh, batch)
+
+        def body(carry, mb):
+            acc, met_acc = carry
+            grads, metrics = single(params, mb)
+            acc = jax.tree.map(jnp.add, acc, grads)
+            met_acc = jax.tree.map(jnp.add, met_acc, metrics)
+            return (acc, met_acc), 0
+
+        zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        zero_m = {"loss": 0.0, "aux_loss": 0.0, "total_loss": 0.0}
+        (grads, mets), _ = jax.lax.scan(body, (zero_g, zero_m), micro)
+        inv = 1.0 / m
+        return jax.tree.map(lambda g: g * inv, grads), jax.tree.map(lambda x: x * inv, mets)
+
+    def train_step(state, batch):
+        if train_cfg.microbatches > 1:
+            grads, metrics = accumulate(state["params"], batch)
+        else:
+            grads, metrics = single(state["params"], batch)
+        new_params, new_opt, om = apply_updates(
+            state["params"], grads, state["opt"], train_cfg.opt
+        )
+        return {"params": new_params, "opt": new_opt}, {**metrics, **om}
+
+    return train_step
+
+
+def make_eval_step(model_cfg: ModelConfig, train_cfg: TrainConfig):
+    loss_fn = make_loss_fn(model_cfg, train_cfg)
+
+    def eval_step(params, batch):
+        _, metrics = loss_fn(params, batch)
+        return metrics
+
+    return eval_step

@@ -1,0 +1,78 @@
+"""Block-RLE (EWAH/RBMRG adaptation): pruning correctness + work accounting."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.blockrle import classify_tiles, rbmrg_block_threshold, runcount
+from repro.core.bitmaps import pack, unpack
+from repro.core.threshold import threshold
+
+
+def _clustered(n, r, seed=0, lo=8000, hi=40000):
+    """Bitmaps with runs much longer than a tile (EWAH-friendly data)."""
+    rng = np.random.default_rng(seed)
+    bits = np.zeros((n, r), bool)
+    for i in range(n):
+        pos = 0
+        while pos < r:
+            run = int(rng.integers(lo, hi))
+            val = rng.random() < 0.4
+            bits[i, pos : pos + run] = val
+            pos += run
+    return bits
+
+
+def test_rbmrg_block_matches_threshold():
+    r = 64 * 32 * 40  # 40 tiles of 64 words
+    bits = _clustered(9, r, seed=1)
+    bm = pack(jnp.asarray(bits))
+    for t in (1, 2, 4, 8, 9):
+        out, info = rbmrg_block_threshold(bm, t, tile_words=64)
+        expect = np.asarray(unpack(threshold(bm, t, "scancount"), r))
+        np.testing.assert_array_equal(np.asarray(unpack(out, r)), expect, err_msg=f"t={t}")
+
+
+def test_pruning_skips_clean_work():
+    r = 64 * 32 * 64
+    bits = _clustered(8, r, seed=2)
+    bm = pack(jnp.asarray(bits))
+    _, info = rbmrg_block_threshold(bm, 4, tile_words=64)
+    # clustered data must prune a large majority of the word-level work
+    assert info["work_fraction"] < 0.5, info
+    assert info["case1_tiles"] + info["case2_tiles"] + info["case3_tiles"] == info["n_tiles"]
+
+
+def test_dense_random_data_prunes_nothing():
+    rng = np.random.default_rng(3)
+    bits = rng.random((6, 64 * 32 * 8)) < 0.5
+    bm = pack(jnp.asarray(bits))
+    out, info = rbmrg_block_threshold(bm, 3, tile_words=64)
+    assert info["case3_tiles"] == info["n_tiles"]  # nothing clean to skip
+    expect = np.asarray(unpack(threshold(bm, 3, "scancount"), bits.shape[1]))
+    np.testing.assert_array_equal(np.asarray(unpack(out, bits.shape[1])), expect)
+
+
+def test_classify_tiles_and_runcount():
+    r = 64 * 32 * 4
+    bits = np.zeros((2, r), bool)
+    bits[0, : r // 2] = True  # one long run
+    bm = pack(jnp.asarray(bits))
+    stats = classify_tiles(bm, tile_words=64)
+    assert stats.classes[0, 0] == 1 and stats.classes[0, -1] == 0
+    assert stats.classes[1].tolist() == [0, 0, 0, 0]
+    # RUNCOUNT: bitmap0 has 2 runs, bitmap1 has 1
+    assert runcount(bm) == 3
+    assert stats.clean_fraction == 1.0
+
+
+def test_extreme_case_all_clean():
+    """The paper's extreme example (4.1): every bitmap entirely 0s or 1s ->
+    O(N log N) work, zero dirty words."""
+    nw = 64 * 16
+    bm = jnp.concatenate(
+        [jnp.zeros((3, nw), jnp.uint32), jnp.full((5, nw), 0xFFFFFFFF, jnp.uint32)]
+    )
+    out, info = rbmrg_block_threshold(bm, 4, tile_words=64)
+    assert info["dirty_words_processed"] == 0
+    assert np.asarray(unpack(out, nw * 32)).all()  # 5 >= 4
+    out2, info2 = rbmrg_block_threshold(bm, 6, tile_words=64)
+    assert not np.asarray(unpack(out2, nw * 32)).any()  # 5 < 6

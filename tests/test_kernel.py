@@ -1,0 +1,71 @@
+"""Pallas kernel: shape/dtype sweep against the pure-jnp oracle (interpret)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ops import fused_interval, fused_symmetric, fused_threshold
+from repro.kernels.ref import symmetric_ref, threshold_ref
+from repro.kernels.threshold_ssum import pick_block_words, threshold_pallas
+
+
+def _bm(n, nw, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, 2**32, (n, nw), dtype=np.uint32))
+
+
+@pytest.mark.parametrize("n", [2, 3, 5, 16, 64, 130])
+@pytest.mark.parametrize("nw", [1, 7, 100, 1030])
+def test_threshold_kernel_shape_sweep(n, nw):
+    bm = _bm(n, nw, seed=n * 1000 + nw)
+    for t in sorted({1, 2, n // 2, n}):
+        got = np.asarray(fused_threshold(bm, t, block_words=256))
+        exp = np.asarray(threshold_ref(bm, t))
+        np.testing.assert_array_equal(got, exp, err_msg=f"n={n} nw={nw} t={t}")
+
+
+@pytest.mark.parametrize("block_words", [128, 1024, 4096])
+def test_threshold_kernel_block_sizes(block_words):
+    bm = _bm(33, 2050, seed=9)
+    got = np.asarray(fused_threshold(bm, 11, block_words=block_words))
+    np.testing.assert_array_equal(got, np.asarray(threshold_ref(bm, 11)))
+
+
+def test_symmetric_kernel():
+    rng = np.random.default_rng(4)
+    for n in (4, 9, 31):
+        bm = _bm(n, 300, seed=n)
+        truth = tuple(bool(x) for x in rng.integers(0, 2, n + 1))
+        got = np.asarray(fused_symmetric(bm, truth, block_words=256))
+        np.testing.assert_array_equal(got, np.asarray(symmetric_ref(bm, truth)))
+
+
+def test_interval_kernel():
+    bm = _bm(12, 129, seed=5)
+    got = np.asarray(fused_interval(bm, 3, 7))
+    exp = np.asarray(symmetric_ref(bm, tuple(3 <= w <= 7 for w in range(13))))
+    np.testing.assert_array_equal(got, exp)
+
+
+def test_treeadd_kernel_variant():
+    bm = _bm(21, 500, seed=6)
+    got = np.asarray(threshold_pallas(bm, 9, kind="treeadd", interpret=True))
+    np.testing.assert_array_equal(got, np.asarray(threshold_ref(bm, 9)))
+
+
+def test_pick_block_words_vmem_budget():
+    # block must shrink as N grows to hold the working set in VMEM
+    small_n = pick_block_words(8, 1 << 20)
+    large_n = pick_block_words(512, 1 << 20)
+    assert small_n >= large_n
+    assert large_n >= 1024  # lane-aligned floor
+    # working set (2 rows live per input) fits the 4 MiB default budget
+    assert 2 * 512 * large_n * 4 <= 4 * 1024 * 1024 + 512 * 1024
+
+
+def test_kernel_matches_all_jnp_algorithms():
+    from repro.core.threshold import threshold
+
+    bm = _bm(17, 200, seed=8)
+    fused = np.asarray(threshold(bm, 6, "fused"))
+    for alg in ("scancount", "ssum", "looped", "csvckt"):
+        np.testing.assert_array_equal(fused, np.asarray(threshold(bm, 6, alg)))

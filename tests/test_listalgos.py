@@ -1,0 +1,49 @@
+"""Integer-list baselines (WHEAP/MGOPT/WMGSK/DSK/WSORT/...): vs scancount."""
+import numpy as np
+import pytest
+
+from repro.core import listalgos as LA
+
+
+def _lists(n, r, card, seed=0):
+    rng = np.random.default_rng(seed)
+    return [np.sort(rng.choice(r, size=rng.integers(1, card), replace=False)) for _ in range(n)]
+
+
+ALGOS = [LA.wheap, LA.wsort, LA.hashcnt, LA.w2cti, LA.mgopt, LA.wmgsk, LA.dsk]
+
+
+@pytest.mark.parametrize("algo", ALGOS, ids=lambda f: f.__name__)
+@pytest.mark.parametrize("n,r,card", [(5, 500, 200), (12, 2000, 400), (8, 300, 290)])
+def test_against_scancount(algo, n, r, card):
+    lists = _lists(n, r, card, seed=n)
+    for t in sorted({2, 3, n // 2, n - 1}):
+        expect = LA.scancount_np(lists, t, r)
+        got = algo(lists, t, r)
+        np.testing.assert_array_equal(np.asarray(got), expect, err_msg=f"{algo.__name__} t={t}")
+
+
+def test_skewed_lists_dsk_mgopt():
+    """Pruning algorithms with very skewed list sizes (their favoured case)."""
+    rng = np.random.default_rng(11)
+    r = 5000
+    lists = [np.sort(rng.choice(r, size=s, replace=False)) for s in (4000, 3500, 20, 15, 10)]
+    for t in (4, 5):
+        expect = LA.scancount_np(lists, t, r)
+        np.testing.assert_array_equal(LA.mgopt(lists, t, r), expect)
+        np.testing.assert_array_equal(LA.dsk(lists, t, r), expect)
+        np.testing.assert_array_equal(LA.wmgsk(lists, t, r), expect)
+
+
+def test_matches_bitmap_threshold():
+    import jax.numpy as jnp
+
+    from repro.core.bitmaps import from_positions, to_positions_np
+    from repro.core.threshold import threshold
+
+    lists = _lists(7, 800, 300, seed=5)
+    bm = jnp.stack([from_positions(l, 800) for l in lists])
+    for t in (2, 4, 6):
+        got_bitmap = to_positions_np(threshold(bm, t, "ssum"))
+        expect = LA.scancount_np(lists, t, 800)
+        np.testing.assert_array_equal(got_bitmap, expect)

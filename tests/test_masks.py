@@ -1,0 +1,58 @@
+"""Bitmap mask composition for serving: correctness + tile skipping."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bitmaps import unpack
+from repro.serve.masks import (
+    causal_mask_bitmap,
+    compose_masks_all,
+    document_mask_bitmap,
+    head_vote_mask,
+    kv_tile_skiplist,
+    window_mask_bitmap,
+)
+
+
+def test_composed_mask_matches_dense_logic():
+    rng = np.random.default_rng(0)
+    n_kv = 300
+    kv_pos = rng.permutation(n_kv).astype(np.int32)
+    kv_pos[5] = -1  # empty slot
+    doc = rng.integers(0, 3, n_kv).astype(np.int32)
+    q_pos, window, q_doc = 200, 64, 1
+
+    m = compose_masks_all(
+        causal_mask_bitmap(q_pos, kv_pos),
+        window_mask_bitmap(q_pos, kv_pos, window),
+        document_mask_bitmap(doc, q_doc),
+    )
+    got = np.asarray(unpack(m, n_kv))
+    expect = (
+        (kv_pos >= 0) & (kv_pos <= q_pos) & (q_pos - kv_pos < window) & (doc == q_doc)
+    )
+    np.testing.assert_array_equal(got, expect)
+
+
+def test_head_vote_threshold():
+    rng = np.random.default_rng(1)
+    n_pages = 256
+    votes_bool = rng.random((8, n_pages)) < 0.2
+    from repro.core.bitmaps import pack
+
+    votes = pack(jnp.asarray(votes_bool))
+    kept = np.asarray(unpack(head_vote_mask(votes, 3), n_pages))
+    np.testing.assert_array_equal(kept, votes_bool.sum(0) >= 3)
+
+
+def test_kv_tile_skiplist_skips_dead_tiles():
+    n_kv = 32 * 64 * 8  # 8 tiles of 2048 positions
+    live = np.zeros(n_kv, bool)
+    live[:2048] = True          # tile 0 fully live
+    live[3 * 2048 + 17] = True  # tile 3 one bit
+    from repro.core.bitmaps import pack
+
+    mask = pack(jnp.asarray(live))
+    keep, info = kv_tile_skiplist(mask, n_kv, tile_positions=2048)
+    assert keep.tolist() == [0, 3]
+    assert info["skipped_tiles"] == 6
+    assert 0.74 < info["skip_fraction"] <= 0.76

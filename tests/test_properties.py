@@ -1,0 +1,101 @@
+"""Property-based tests (hypothesis) for the system's invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bitmaps import bitmap_not, pack, unpack
+from repro.core.symmetric import exactly, interval, parity, symmetric
+from repro.core.threshold import threshold
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@st.composite
+def bitmap_batch(draw, max_n=10, max_r=200):
+    n = draw(st.integers(2, max_n))
+    r = draw(st.integers(1, max_r))
+    seed = draw(st.integers(0, 2**31 - 1))
+    density = draw(st.floats(0.0, 1.0))
+    rng = np.random.default_rng(seed)
+    bits = rng.random((n, r)) < density
+    return bits, pack(jnp.asarray(bits)), n, r
+
+
+@given(bitmap_batch(), st.data())
+@settings(**SETTINGS)
+def test_permutation_symmetry(batch, data):
+    """Symmetric functions are invariant under input permutation (2.2)."""
+    bits, bm, n, r = batch
+    t = data.draw(st.integers(1, n))
+    perm = data.draw(st.permutations(range(n)))
+    base = np.asarray(threshold(bm, t, "ssum"))
+    permuted = np.asarray(threshold(bm[jnp.asarray(perm)], t, "ssum"))
+    np.testing.assert_array_equal(base, permuted)
+
+
+@given(bitmap_batch())
+@settings(**SETTINGS)
+def test_monotone_in_t(batch):
+    """theta(T+1) implies theta(T): result bitmaps are nested (2.3)."""
+    bits, bm, n, r = batch
+    prev = np.asarray(unpack(threshold(bm, 1), r))
+    for t in range(2, n + 1):
+        cur = np.asarray(unpack(threshold(bm, t), r))
+        assert not np.any(cur & ~prev), f"t={t} not nested"
+        prev = cur
+
+
+@given(bitmap_batch(), st.data())
+@settings(**SETTINGS)
+def test_complement_identity(batch, data):
+    """NOT theta(T, B) == theta(N-T+1, {NOT b}) (the paper's 2.3 identity)."""
+    bits, bm, n, r = batch
+    t = data.draw(st.integers(1, n))
+    lhs = ~np.asarray(unpack(threshold(bm, t), r))
+    rhs = np.asarray(unpack(threshold(bitmap_not(bm, r), n - t + 1), r))
+    np.testing.assert_array_equal(lhs, rhs)
+
+
+@given(bitmap_batch(), st.data())
+@settings(**SETTINGS)
+def test_exact_and_interval_consistency(batch, data):
+    """delta(k) == theta(k) ANDNOT theta(k+1); interval = union of deltas."""
+    bits, bm, n, r = batch
+    k = data.draw(st.integers(0, n))
+    counts = bits.sum(0)
+    np.testing.assert_array_equal(
+        np.asarray(unpack(exactly(bm, k, r=r), r)), counts == k
+    )
+    lo = data.draw(st.integers(0, n))
+    hi = data.draw(st.integers(lo, n))
+    np.testing.assert_array_equal(
+        np.asarray(unpack(interval(bm, lo, hi, r=r), r)), (counts >= lo) & (counts <= hi)
+    )
+
+
+@given(bitmap_batch())
+@settings(**SETTINGS)
+def test_parity_is_xor(batch):
+    bits, bm, n, r = batch
+    expect = bits.sum(0) % 2 == 1
+    np.testing.assert_array_equal(np.asarray(unpack(parity(bm, r=r), r)), expect)
+
+
+@given(bitmap_batch(), st.data())
+@settings(**SETTINGS)
+def test_arbitrary_symmetric_truth_table(batch, data):
+    bits, bm, n, r = batch
+    truth = tuple(data.draw(st.booleans()) for _ in range(n + 1))
+    counts = bits.sum(0)
+    expect = np.array([truth[c] for c in counts])
+    np.testing.assert_array_equal(
+        np.asarray(unpack(symmetric(bm, truth, r=r), r)), expect
+    )
+
+
+@given(st.integers(1, 400), st.integers(0, 2**31 - 1), st.floats(0, 1))
+@settings(**SETTINGS)
+def test_pack_unpack_roundtrip(r, seed, density):
+    rng = np.random.default_rng(seed)
+    bits = rng.random(r) < density
+    assert np.array_equal(np.asarray(unpack(pack(jnp.asarray(bits)), r)), bits)

@@ -1,0 +1,87 @@
+"""Streaming SCANCOUNT (huge-N) + end-to-end preemption handling."""
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bitmaps import pack, unpack
+from repro.core.threshold import threshold
+from repro.kernels.ops import fused_weighted_threshold
+from repro.core.weighted import weighted_threshold_decomposed
+
+
+def test_streaming_scancount_matches_at_large_n():
+    """The paper's 6 future-work question: N in the thousands+ is where the
+    circuit family stops scaling; the streaming counter does not care."""
+    rng = np.random.default_rng(0)
+    n, r = 2048, 200
+    bits = rng.random((n, r)) < 0.01
+    bm = pack(jnp.asarray(bits))
+    counts = bits.sum(0)
+    for t in (2, 10, 25):
+        got = np.asarray(unpack(threshold(bm, t, "scancount_streaming"), r))
+        np.testing.assert_array_equal(got, counts >= t)
+
+
+def test_streaming_matches_all_small_n():
+    rng = np.random.default_rng(1)
+    bits = rng.random((37, 500)) < 0.3
+    bm = pack(jnp.asarray(bits))
+    for t in (1, 5, 19, 37):
+        a = np.asarray(threshold(bm, t, "scancount_streaming"))
+        b = np.asarray(threshold(bm, t, "ssum"))
+        np.testing.assert_array_equal(a, b)
+
+
+def test_fused_weighted_kernel_matches_decomposed():
+    rng = np.random.default_rng(2)
+    bits = rng.random((9, 300)) < 0.4
+    bm = pack(jnp.asarray(bits))
+    w = tuple(int(x) for x in rng.integers(1, 30, 9))
+    for t in (3, sum(w) // 2, sum(w) - 1):
+        a = np.asarray(fused_weighted_threshold(bm, w, t))
+        b = np.asarray(weighted_threshold_decomposed(bm, w, t))
+        np.testing.assert_array_equal(a, b)
+
+
+def test_preemption_sigterm_checkpoints_and_resumes(tmp_path):
+    """Send SIGTERM to a live training run: it must checkpoint and exit
+    cleanly; a relaunch must resume from the preemption checkpoint."""
+    env = {**os.environ, "PYTHONPATH": os.path.join(os.path.dirname(__file__), "..", "src")}
+    args = [
+        sys.executable, "-u", "-m", "repro.launch.train",
+        "--arch", "qwen3-1.7b", "--reduced", "--batch", "2", "--seq", "16",
+        "--steps", "100000", "--ckpt-dir", str(tmp_path), "--ckpt-every", "100000",
+    ]
+    proc = subprocess.Popen(args, env=env, stdout=subprocess.PIPE,
+                            stderr=subprocess.PIPE, text=True)
+    # wait until training has actually stepped (first log line), then preempt
+    deadline = time.time() + 300
+    line = ""
+    while time.time() < deadline:
+        line = proc.stdout.readline()
+        if line.startswith("step"):
+            break
+    assert line.startswith("step"), "training never started"
+    time.sleep(1.0)
+    proc.send_signal(signal.SIGTERM)
+    out, err = proc.communicate(timeout=300)
+    assert proc.returncode == 0, err[-2000:]
+    assert "[preempt]" in out, out[-2000:]
+    ckpts = [d for d in os.listdir(tmp_path) if d.startswith("step_")]
+    assert ckpts, "no preemption checkpoint written"
+    # resume past the preemption point
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "qwen3-1.7b",
+         "--reduced", "--batch", "2", "--seq", "16",
+         "--steps", str(int(ckpts[0][5:]) + 3),
+         "--ckpt-dir", str(tmp_path), "--ckpt-every", "100000"],
+        env=env, capture_output=True, text=True, timeout=300,
+    )
+    assert res.returncode == 0, res.stderr[-2000:]
+    assert "[resume] restored step" in res.stdout, res.stdout

@@ -1,0 +1,66 @@
+"""Threshold algorithms: cross-equivalence and degenerate cases."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bitmaps import pack, unpack
+from repro.core.threshold import threshold, weighted_threshold
+
+ALGOS = ("scancount", "looped", "ssum", "treeadd", "srtckt", "csvckt", "fused")
+
+
+def _mk(n, r, density, seed=0):
+    rng = np.random.default_rng(seed)
+    bits = rng.random((n, r)) < density
+    return bits, pack(jnp.asarray(bits))
+
+
+@pytest.mark.parametrize("n,r,density", [(2, 40, 0.5), (5, 100, 0.3), (8, 64, 0.1),
+                                         (16, 257, 0.7), (33, 1000, 0.05)])
+def test_all_algorithms_agree(n, r, density):
+    bits, bm = _mk(n, r, density)
+    counts = bits.sum(0)
+    for t in sorted({1, 2, 3, n // 2, n - 1, n}):
+        if t < 1:
+            continue
+        expect = counts >= t
+        for alg in ALGOS:
+            got = np.asarray(unpack(threshold(bm, t, alg), r))
+            np.testing.assert_array_equal(got, expect, err_msg=f"{alg} t={t}")
+
+
+def test_degenerate_thresholds():
+    bits, bm = _mk(6, 90, 0.4)
+    # T <= 0 -> all ones; T > N -> all zeros
+    assert np.asarray(unpack(threshold(bm, 0), 90)).all()
+    assert not np.asarray(unpack(threshold(bm, 7), 90)).any()
+    # T=1 == OR, T=N == AND
+    np.testing.assert_array_equal(
+        np.asarray(unpack(threshold(bm, 1), 90)), bits.any(0)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(unpack(threshold(bm, 6), 90)), bits.all(0)
+    )
+
+
+def test_sopckt_small():
+    bits, bm = _mk(5, 70, 0.5)
+    counts = bits.sum(0)
+    for t in (1, 2, 3):
+        got = np.asarray(unpack(threshold(bm, t, "sopckt"), 70))
+        np.testing.assert_array_equal(got, counts >= t)
+
+
+def test_weighted_threshold_replication():
+    bits, bm = _mk(3, 50, 0.5)
+    w = [2, 1, 3]
+    wcounts = (bits * np.array(w)[:, None]).sum(0)
+    for t in (2, 3, 5):
+        got = np.asarray(unpack(weighted_threshold(bm, w, t), 50))
+        np.testing.assert_array_equal(got, wcounts >= t)
+
+
+def test_static_t_required():
+    _, bm = _mk(4, 32, 0.5)
+    with pytest.raises((TypeError, ValueError)):
+        threshold(bm, jnp.int32(2))  # type: ignore[arg-type]

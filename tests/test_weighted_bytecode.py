@@ -1,0 +1,74 @@
+"""Weighted-threshold decomposition + byte-code compilation layers."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bitmaps import pack, unpack
+from repro.core.bytecode import Interpreter, compile_circuit
+from repro.core.circuits import build_threshold_circuit
+from repro.core.threshold import weighted_threshold
+from repro.core.weighted import (
+    build_weighted_threshold_circuit,
+    decomposed_gate_cost,
+    replication_gate_cost,
+    weighted_threshold_decomposed,
+)
+
+
+@given(st.data())
+@settings(max_examples=25, deadline=None)
+def test_decomposed_matches_weighted_counts(data):
+    n = data.draw(st.integers(2, 8))
+    r = data.draw(st.integers(1, 120))
+    weights = tuple(data.draw(st.integers(0, 37)) for _ in range(n))
+    if sum(weights) == 0:
+        weights = weights[:-1] + (1,)
+    t = data.draw(st.integers(1, max(sum(weights), 1)))
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31 - 1)))
+    bits = rng.random((n, r)) < 0.4
+    bm = pack(jnp.asarray(bits))
+    got = np.asarray(unpack(weighted_threshold_decomposed(bm, weights, t), r))
+    expect = (bits * np.array(weights)[:, None]).sum(0) >= t
+    np.testing.assert_array_equal(got, expect)
+
+
+def test_decomposed_matches_replication():
+    rng = np.random.default_rng(0)
+    bits = rng.random((5, 200)) < 0.3
+    bm = pack(jnp.asarray(bits))
+    weights = (3, 1, 4, 1, 5)
+    for t in (2, 7, 14):
+        a = np.asarray(weighted_threshold(bm, list(weights), t))
+        b = np.asarray(weighted_threshold_decomposed(bm, weights, t))
+        np.testing.assert_array_equal(a, b)
+
+
+def test_decomposition_beats_replication_on_large_weights():
+    weights = [997, 512, 613, 700, 801, 64, 900, 1000] * 4  # 32 inputs
+    t = sum(weights) // 2
+    rep = replication_gate_cost(weights, t)
+    dec = decomposed_gate_cost(weights, t)
+    assert dec * 20 < rep, (dec, rep)  # >20x smaller circuit
+
+
+def test_bytecode_matches_direct_evaluation():
+    rng = np.random.default_rng(1)
+    for n, t in [(5, 2), (16, 9), (33, 20)]:
+        circ = build_threshold_circuit(n, t, "ssum")
+        bc = compile_circuit(circ)
+        words = rng.integers(0, 2**32, (n, 40), dtype=np.uint32)
+        got = Interpreter().run(bc, list(words))
+        (expect,) = circ.evaluate([jnp.asarray(w) for w in words])
+        np.testing.assert_array_equal(got, np.asarray(expect))
+        # register allocation: far fewer registers than gates (paper Table 3
+        # note: "space for o(N) bitmaps would suffice")
+        assert bc.n_registers <= n + 8
+        assert bc.peak_registers <= bc.n_registers + n
+
+
+def test_bytecode_reclaims_registers():
+    circ = build_threshold_circuit(64, 32, "ssum")
+    bc = compile_circuit(circ)
+    assert len(bc.instructions) == circ.gate_count()
+    # ~5N gates but live set stays near N
+    assert bc.n_registers < circ.gate_count() / 3
