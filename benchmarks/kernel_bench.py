@@ -41,10 +41,11 @@ def hbm_model(n: int, t: int, n_words: int) -> dict:
     return {"fused_bytes": fused, "composed_bytes": composed, "ratio": composed / fused}
 
 
-def run():
+def run(smoke: bool = False):
     out = []
     rng = np.random.default_rng(0)
-    for n, nw in [(32, 1 << 16), (128, 1 << 16), (256, 1 << 14)]:
+    shapes = [(16, 1 << 10)] if smoke else [(32, 1 << 16), (128, 1 << 16), (256, 1 << 14)]
+    for n, nw in shapes:
         bm = jnp.asarray(rng.integers(0, 2**32, (n, nw), dtype=np.uint32))
         t = n // 2
         for alg in ("scancount", "ssum", "looped", "csvckt"):
@@ -64,5 +65,9 @@ def run():
 
 
 if __name__ == "__main__":
-    for name, val, extra in run():
+    import sys
+
+    # --smoke: tiny shapes for CI, so fused-kernel perf regressions are at
+    # least visible on every push without a long-running job
+    for name, val, extra in run(smoke="--smoke" in sys.argv):
         print(f"{name},{val:.2f},{extra}")

@@ -1,0 +1,75 @@
+"""Query-layer benchmark: what the unified API buys.
+
+  * composed expression compiled as ONE circuit (shared sideways-sum adder)
+    vs leaf-at-a-time execution with a bitwise combine afterwards;
+  * ``execute_many`` batching k independent queries into one jitted
+    multi-output call vs k sequential calls;
+  * compiled-circuit cache: cold (build + optimise + jit) vs warm hit.
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.query import (
+    And,
+    BitmapIndex,
+    Interval,
+    Not,
+    Parity,
+    Threshold,
+    clear_compiled_cache,
+)
+
+
+def _time(fn, reps=5):
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+def run(smoke: bool = False):
+    out = []
+    rng = np.random.default_rng(0)
+    n, nw = (16, 1 << 10) if smoke else (32, 1 << 14)
+    bm = jnp.asarray(rng.integers(0, 2**32, (n, nw), dtype=np.uint32))
+    idx = BitmapIndex(bm)
+
+    q = And(Interval(2, 10), Not(Threshold(n - 2)))
+    composed = _time(lambda: idx.execute(q, backend="circuit").block_until_ready())
+
+    def leafwise():
+        a = idx.execute(Interval(2, 10), backend="circuit")
+        b = idx.execute(Threshold(n - 2), backend="ssum")
+        return (a & ~b).block_until_ready()
+
+    leaf = _time(leafwise)
+    out.append(("query_composed_us", composed * 1e6, f"N={n} r={nw * 32}"))
+    out.append(("query_leafwise_us", leaf * 1e6, "2 adder passes + combine"))
+    out.append(("query_composed_speedup", leaf / composed, "one shared adder"))
+
+    qs = [Threshold(t) for t in (2, n // 4, n // 2, n - 1)] + [Parity()]
+    many = _time(lambda: [r.block_until_ready() for r in idx.execute_many(qs)])
+    seq = _time(lambda: [idx.execute(x).block_until_ready() for x in qs])
+    out.append(("query_batched_us", many * 1e6, f"{len(qs)} queries, one call"))
+    out.append(("query_sequential_us", seq * 1e6, f"{len(qs)} separate executes"))
+
+    clear_compiled_cache()
+    t0 = time.perf_counter()
+    idx.execute(q, backend="circuit").block_until_ready()
+    cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    idx.execute(q, backend="circuit").block_until_ready()
+    warm = time.perf_counter() - t0
+    out.append(("query_compile_cold_ms", cold * 1e3, "build + optimise + jit"))
+    out.append(("query_cached_warm_ms", warm * 1e3, "compiled-circuit cache hit"))
+    return out
+
+
+if __name__ == "__main__":
+    for name, val, extra in run():
+        print(f"{name},{val:.2f},{extra}")

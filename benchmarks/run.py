@@ -8,6 +8,8 @@ Prints ``name,value,derived`` CSV lines.  Sections:
   heatmap  -- SMALL-COMPETITIONS win/terrible rates (paper 5.8, App. C)
   weighted -- weighted thresholds: replication vs binary decomposition
   kernel   -- fused Pallas kernel traffic model + jnp wall-times
+  query    -- unified query API: composed-circuit vs leafwise, batching,
+              compiled-circuit cache (repro.query)
   roofline -- three-term roofline per dry-run cell (deliverable g; requires
               artifacts/dryrun from ``python -m repro.launch.dryrun``)
 """
@@ -18,7 +20,7 @@ import traceback
 
 
 def main() -> None:
-    sections = sys.argv[1:] or ["table5", "table7", "fig3", "table10", "heatmap", "kernel", "weighted", "roofline"]
+    sections = sys.argv[1:] or ["table5", "table7", "fig3", "table10", "heatmap", "kernel", "weighted", "query", "roofline"]
     failures = 0
     for section in sections:
         print(f"# --- {section} ---")
@@ -49,6 +51,10 @@ def main() -> None:
                 rows = mod.run()
             elif section == "weighted":
                 from benchmarks import weighted_bench as mod
+
+                rows = mod.run()
+            elif section == "query":
+                from benchmarks import query_bench as mod
 
                 rows = mod.run()
             elif section == "roofline":

@@ -1,57 +1,64 @@
-"""Quickstart: threshold and symmetric queries over bitmaps.
+"""Quickstart: composable queries over a bitmap index.
 
     PYTHONPATH=src python examples/quickstart.py
 
-The paper's motivating example: stores x products.  Which products are on
-sale in at least 2 stores?  In exactly 3?  In 2 to 10?  All answers are
-bitmaps, so they compose with further index operations.
+The paper's motivating example: stores x products, one bitmap per store of
+the products it has on sale.  The headline query from the abstract --
+"on sale in 2 to 10 stores" -- is one expression; because every result is
+again a bitmap, queries compose and feed back in as virtual columns.
 """
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (
-    cardinality,
-    exactly,
-    interval,
-    pack,
-    plan_threshold,
-    threshold,
-    to_positions_np,
-    unpack,
-)
+from repro.core.bitmaps import unpack
+from repro.query import And, BitmapIndex, Col, Interval, Not, Parity, Threshold
 
 N_STORES, N_PRODUCTS = 12, 10_000
 rng = np.random.default_rng(0)
 
-# each store's "on sale" set as one bitmap row
+# each store's "on sale" set as one index column
 on_sale = rng.random((N_STORES, N_PRODUCTS)) < 0.15
-bitmaps = pack(jnp.asarray(on_sale))
-print(f"{N_STORES} stores x {N_PRODUCTS} products, "
-      f"cardinalities: {np.asarray(cardinality(bitmaps))[:6]}...")
+idx = BitmapIndex.from_dense(
+    jnp.asarray(on_sale), names=[f"store{i}" for i in range(N_STORES)]
+)
+stats = idx.stats()  # index-build-time statistics feed the planner
+print(f"{idx.n} stores x {idx.r} products, "
+      f"cardinalities: {stats.cardinalities[:6]}...")
 
-# threshold: on sale in >= 2 stores (theta(2, .)), via the fused kernel
-hot = threshold(bitmaps, 2, algorithm="fused")
-print(f"on sale in >=2 stores : {int(cardinality(hot)):6d} products")
+# the abstract's query: on sale in 2 to 10 stores
+mid = idx.execute(Interval(2, 10))
+print(f"on sale in 2..10 stores       : {idx.count(Interval(2, 10)):6d} products")
 
-# the planner picks the paper-recommended algorithm from (N, T, stats)
-plan = plan_threshold(N_STORES, 2)
-print(f"planner says          : {plan.algorithm} ({plan.rationale})")
+# no string algorithm= argument anywhere: the planner picks the backend
+plan = idx.explain(Threshold(2))
+print(f"planner for Threshold(2)      : {plan.algorithm} ({plan.rationale})")
 
-# delta function: exactly 3 stores
-just3 = exactly(bitmaps, 3, r=N_PRODUCTS)
-print(f"in exactly 3 stores   : {int(cardinality(just3)):6d}")
+# queries compose: in 2..10 stores AND NOT in store 0, one compiled circuit
+q = And(Interval(2, 10), Not(Col("store0")))
+print(f"...and not in store 0         : {idx.count(q):6d}")
 
-# interval: the paper's "2 to 10 stores" example
-mid = interval(bitmaps, 2, 10, r=N_PRODUCTS)
-print(f"in 2..10 stores       : {int(cardinality(mid)):6d}")
+# operators build the same trees: & | ~ -
+q2 = Interval(2, 10) & ~Threshold(11)
+print(f"in 2..10 but never 11+        : {idx.count(q2):6d}")
 
-# results are bitmaps: compose with a further AND (e.g. "and in store 0")
-also_store0 = jnp.bitwise_and(hot, bitmaps[0])
-print(f">=2 stores AND store 0: {int(cardinality(also_store0)):6d}")
+# independent queries batch into ONE jitted multi-output circuit call
+hot, odd, rare = idx.execute_many([Threshold(2), Parity(), Interval(1, 1)])
+print(f"threshold/parity/exactly-once : "
+      f"{int(unpack(hot, idx.r).sum())} / {int(unpack(odd, idx.r).sum())} / "
+      f"{int(unpack(rare, idx.r).sum())}")
+
+# results are bitmaps: feed one back in as a virtual column and keep querying
+idx.add_column("hot", hot)
+promo = idx.execute(And(Col("hot"), Col("store0")))
+print(f"hot AND in store 0            : {int(unpack(promo, idx.r).sum()):6d}")
+
+# sub-queries can even vote inside a threshold: 2 of these 3 criteria
+panel = Threshold(2, over=(Col("store0"), Col("store1"), Interval(4, 10)))
+print(f"2 of [s0, s1, broadly on sale]: {idx.count(panel):6d}")
 
 # verify against per-position counts
 counts = on_sale.sum(0)
-assert (np.asarray(unpack(hot, N_PRODUCTS)) == (counts >= 2)).all()
-assert (np.asarray(unpack(just3, N_PRODUCTS)) == (counts == 3)).all()
+assert (np.asarray(unpack(mid, idx.r)) == ((counts >= 2) & (counts <= 10))).all()
+assert (np.asarray(unpack(hot, idx.r)) == (counts >= 2)).all()
+assert (np.asarray(unpack(promo, idx.r)) == ((counts >= 2) & on_sale[0])).all()
 print("verified against position counts - OK")
-print("first few >=2-store products:", to_positions_np(hot)[:8])

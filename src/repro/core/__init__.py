@@ -28,13 +28,14 @@ from .circuits import (
     looped_op_count,
     paper_tree_adder_gates,
 )
-from .planner import Plan, plan_threshold
+from .planner import Plan, plan_query, plan_threshold
 from .symmetric import exactly, interval, majority, parity, symmetric
 from .threshold import ALGORITHMS, hamming_weight_words, threshold, weighted_threshold
 from .bytecode import ByteCode, Interpreter, compile_circuit
 from .weighted import (
     build_weighted_threshold_circuit,
     decomposed_gate_cost,
+    emit_weighted_ge,
     replication_gate_cost,
     weighted_threshold_decomposed,
 )

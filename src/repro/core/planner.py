@@ -1,21 +1,33 @@
 """Algorithm selection -- the paper's 5.10 decision rules as a planner.
 
-Given (N, T) and cheap data statistics (density, clean-tile fraction),
-choose the algorithm a query engine should run.  The recommendations
-encode the paper's conclusions:
+Given a query (or bare (N, T)) and cheap data statistics (density,
+clean-tile fraction), choose the backend a query engine should run.  Every
+plan names a *runnable executor*: bare-threshold names resolve through
+``repro.query.executors.run_threshold_backend`` (equivalently the
+``threshold()`` shim) and circuit names through ``BitmapIndex``'s compiled
+cache.  The recommendations encode the paper's conclusions:
 
-  * T == 1 / T == N        -> wide OR / wide AND
-  * many clean runs        -> RBMRG (block variant here)
+  * T == 1 / T == N        -> wide OR / wide AND (paper 2.3)
+  * many clean runs        -> RBMRG (tile-level block variant here)
   * very small T           -> LOOPED
   * T close to N, sparse   -> pruning algorithms (host-side DSK)
   * otherwise              -> SSUM ('if one does not know much about the
-                               data ... the adder circuits are safe bets')
+                               data ... the adder circuits are safe bets'),
+                               as the fused Pallas kernel on TPU, as the
+                               XLA-compiled circuit elsewhere
+
+Composite expressions and non-threshold symmetric leaves always compile to
+one shared circuit ('circuit' or 'fused'), because the whole tree costs a
+single adder pass there -- leaf-at-a-time execution cannot win.
 """
 from __future__ import annotations
 
 import dataclasses
 
-__all__ = ["Plan", "plan_threshold"]
+__all__ = ["Plan", "plan_threshold", "plan_query", "CIRCUIT_BACKENDS"]
+
+# Backends executed by compiling the (whole) expression into one circuit.
+CIRCUIT_BACKENDS = ("circuit", "fused")
 
 
 @dataclasses.dataclass
@@ -31,7 +43,9 @@ def plan_threshold(
     density: float | None = None,
     clean_fraction: float | None = None,
     on_device: bool = True,
+    fused_available: bool = True,
 ) -> Plan:
+    """Pick the executor for theta(T, .) over N bitmaps."""
     if t <= 1:
         return Plan("wide_or", "T<=1 is a wide OR (paper 2.3)")
     if t >= n:
@@ -42,6 +56,12 @@ def plan_threshold(
             f"{clean_fraction:.0%} of tiles are clean runs; run-aware merge "
             "does O(RUNCOUNT log N) work (paper 4.1, 5.10)",
         )
+    if n >= 2048:
+        return Plan(
+            "scancount_streaming",
+            "N huge: per-(N,T) circuit tabulation is infeasible; streaming "
+            "counters keep an O(chunk x r) working set (paper section 6)",
+        )
     if t <= 3:
         return Plan("looped", "T very small: LOOPED is O(NT) ops and wins (paper 5.10)")
     if not on_device and density is not None and density < 1e-3 and t >= 0.9 * n:
@@ -49,4 +69,57 @@ def plan_threshold(
             "dsk",
             "sparse data with T~N: pruning algorithms win on the host (paper 5.8.3)",
         )
-    return Plan("fused", "default: sideways-sum adder, fused kernel (paper 5.10 + ours)")
+    if fused_available:
+        return Plan("fused", "default: sideways-sum adder, fused kernel (paper 5.10 + ours)")
+    return Plan("ssum", "default: sideways-sum adder circuit via XLA (paper 5.10)")
+
+
+def _bare_threshold_members(query):
+    """If ``query`` is a Threshold over plain columns (or all columns),
+    return its member count resolver; else None."""
+    from repro.query.expr import Col, Threshold
+
+    if type(query) is not Threshold:
+        return None
+    if query.over is not None and not all(type(m) is Col for m in query.over):
+        return None
+    return (lambda n: n) if query.over is None else (lambda n: len(query.over))
+
+
+def plan_query(
+    query,
+    n: int,
+    *,
+    density: float | None = None,
+    clean_fraction: float | None = None,
+    on_device: bool = True,
+    fused_available: bool = True,
+) -> Plan:
+    """Pick the executor for a query expression over an N-column index."""
+    from repro.query.expr import Col, Weighted, as_query
+
+    q = as_query(query)
+    if type(q) is Col:
+        return Plan("column", "bare column reference: fetch, no compute")
+    members = _bare_threshold_members(q)
+    if members is not None:
+        return plan_threshold(
+            members(n),
+            q.t,
+            density=density,
+            clean_fraction=clean_fraction,
+            on_device=on_device,
+            fused_available=fused_available,
+        )
+    backend = "fused" if fused_available else "circuit"
+    if type(q) is Weighted:
+        return Plan(
+            backend,
+            "weighted threshold: binary weight decomposition circuit "
+            "(O(log max_w) adders instead of replication; beyond-paper)",
+        )
+    return Plan(
+        backend,
+        "symmetric/composite expression: one compiled circuit, sub-queries "
+        "share the sideways-sum adder via CSE (paper 4.4 + query layer)",
+    )

@@ -8,70 +8,61 @@ exactly the construction sketched in 4.4.1.
 Positions beyond ``r`` (the tail of the last word) have weight 0; when the
 function is true at weight 0 the caller-visible result is masked with
 ``tail_mask`` so the packed result stays canonical.
+
+.. deprecated:: these free functions are thin shims over ``repro.query``
+   (``Sym`` / ``Exactly`` / ``Interval`` / ``Parity`` / ``Majority``
+   expressions executed through the compiled-circuit cache).  Prefer
+   ``BitmapIndex.execute`` -- expressions compose, share adders, and batch.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Sequence
 
 import jax
-import jax.numpy as jnp
-import numpy as np
-
-from . import circuits as _ckt
-from .bitmaps import WORD_DTYPE, tail_mask
 
 __all__ = ["symmetric", "exactly", "interval", "parity", "majority"]
 
 
-def _mask_tail(words: jax.Array, r: int | None) -> jax.Array:
-    if r is None:
-        return words
-    nw = words.shape[-1]
-    mask = np.full(nw, 0xFFFFFFFF, dtype=np.uint32)
-    mask[-1] = tail_mask(r)
-    return jnp.bitwise_and(words, jnp.asarray(mask))
+def _execute(bitmaps, expr, r):
+    from repro.query import execute
+
+    return execute(bitmaps, expr, r=r)
 
 
-@partial(jax.jit, static_argnames=("truth", "r"))
-def symmetric(bitmaps: jax.Array, truth: tuple, r: int | None = None) -> jax.Array:
+def symmetric(bitmaps, truth: Sequence, r: int | None = None) -> jax.Array:
     """Apply the symmetric function given by ``truth[w]`` for weight w=0..N."""
-    bitmaps = jnp.asarray(bitmaps, WORD_DTYPE)
-    n = bitmaps.shape[0]
-    if len(truth) != n + 1:
-        raise ValueError(f"truth table needs {n + 1} entries, got {len(truth)}")
-    circ = _ckt.build_symmetric_circuit(n, list(truth))
-    (out,) = circ.evaluate([bitmaps[i] for i in range(n)])
-    return _mask_tail(out, r)
+    from repro.query import Sym
+
+    return _execute(bitmaps, Sym(tuple(truth)), r)
 
 
 def exactly(bitmaps, k: int, r: int | None = None):
     """The paper's 'delta' function: weight == k exactly."""
-    n = bitmaps.shape[0]
-    return symmetric(bitmaps, tuple(w == k for w in range(n + 1)), r)
+    from repro.query import Exactly
+
+    return _execute(bitmaps, Exactly(k), r)
 
 
 def interval(bitmaps, lo: int, hi: int, r: int | None = None):
     """Weight within [lo, hi] (e.g. 'on sale in 2 to 10 stores')."""
-    n = bitmaps.shape[0]
-    return symmetric(bitmaps, tuple(lo <= w <= hi for w in range(n + 1)), r)
+    from repro.query import Interval
+
+    return _execute(bitmaps, Interval(lo, hi), r)
 
 
 def parity(bitmaps, r: int | None = None):
     """Wide XOR == z0 of the sideways sum; synthesised directly."""
-    bitmaps = jnp.asarray(bitmaps, WORD_DTYPE)
-    n = bitmaps.shape[0]
-    circ = _ckt.Circuit(n, [], [])
-    bits = _ckt.sideways_sum_bits(circ, list(range(n)))
-    circ.outputs = [bits[0]]
-    circ = circ.optimized()
-    (out,) = circ.evaluate([bitmaps[i] for i in range(n)])
-    return _mask_tail(out, r)
+    from repro.query import Parity
+
+    return _execute(bitmaps, Parity(), r)
 
 
 def majority(bitmaps, r: int | None = None):
-    """theta(ceil(N/2)) -- the majority function."""
-    from .threshold import threshold
+    """theta(ceil(N/2)) -- the majority function.
 
-    n = bitmaps.shape[0]
-    return threshold(bitmaps, (n + 1) // 2)
+    ``r`` is honoured (the seed accepted it but never masked the tail,
+    unlike every other symmetric helper).
+    """
+    from repro.query import Majority
+
+    return _execute(bitmaps, Majority(), r)

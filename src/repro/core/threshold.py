@@ -22,7 +22,6 @@ tabulation realised through the XLA compile cache.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Sequence
 
 import jax
@@ -30,7 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import circuits as _ckt
-from .bitmaps import WORD_DTYPE, pack, unpack
+from .bitmaps import WORD_DTYPE
 
 __all__ = ["threshold", "hamming_weight_words", "ALGORITHMS"]
 
@@ -170,42 +169,29 @@ def _scancount_streaming(bitmaps: jax.Array, t: int, chunk: int = 128) -> jax.Ar
     return jnp.sum((counts >= t).astype(jnp.uint32) << shifts, axis=-1, dtype=jnp.uint32)
 
 
+# Every name is a runnable executor (the seed's planner emitted wide_or /
+# rbmrg_block / dsk names that threshold() rejected; no longer).
 ALGORITHMS = (
     "scancount", "scancount_streaming", "looped", "ssum", "treeadd", "srtckt",
-    "sopckt", "csvckt", "fused",
+    "sopckt", "csvckt", "fused", "wide_or", "wide_and", "rbmrg_block", "dsk",
 )
 
 
-@partial(jax.jit, static_argnames=("t", "algorithm"))
 def threshold(bitmaps: jax.Array, t: int, algorithm: str = "ssum") -> jax.Array:
     """theta(T, {B_1..B_N}) over packed bitmaps; returns a packed bitmap.
 
     T=1 is a wide OR and T=N a wide AND (the paper's degenerate cases);
     those short-circuit for every algorithm except the explicit circuits.
-    """
-    bitmaps = jnp.asarray(bitmaps, WORD_DTYPE)
-    n = bitmaps.shape[0]
-    if not (isinstance(t, int)):
-        raise TypeError("T must be a static Python int (circuits are tabulated per (N,T))")
-    if t <= 0:
-        return jnp.full_like(bitmaps[0], 0xFFFFFFFF)
-    if t > n:
-        return jnp.zeros_like(bitmaps[0])
-    if algorithm == "scancount":
-        return _scancount(bitmaps, t)
-    if algorithm == "scancount_streaming":
-        return _scancount_streaming(bitmaps, t)
-    if algorithm == "looped":
-        return _looped(bitmaps, t)
-    if algorithm == "csvckt":
-        return _csvckt(bitmaps, t)
-    if algorithm in ("ssum", "treeadd", "srtckt", "sopckt"):
-        return _circuit_threshold(bitmaps, t, algorithm)
-    if algorithm == "fused":
-        from repro.kernels.ops import fused_threshold
 
-        return fused_threshold(bitmaps, t)
-    raise ValueError(f"unknown algorithm {algorithm!r}")
+    .. deprecated:: prefer the query layer --
+       ``repro.query.BitmapIndex.execute(Threshold(t))`` plans the backend
+       from data statistics and composes with other queries; the string
+       ``algorithm=`` argument survives as an explicit backend override.
+       This shim delegates to ``repro.query.executors.run_threshold_backend``.
+    """
+    from repro.query.executors import run_threshold_backend
+
+    return run_threshold_backend(bitmaps, t, algorithm)
 
 
 def weighted_threshold(

@@ -21,37 +21,39 @@ an ~80x reduction, still yielding a bitmap.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Sequence
 
 import jax
-import jax.numpy as jnp
 
 from . import circuits as C
-from .bitmaps import WORD_DTYPE
 
-__all__ = ["build_weighted_threshold_circuit", "weighted_threshold_decomposed",
-           "replication_gate_cost", "decomposed_gate_cost"]
+__all__ = ["build_weighted_threshold_circuit", "emit_weighted_ge",
+           "weighted_threshold_decomposed", "replication_gate_cost",
+           "decomposed_gate_cost"]
 
 
-def build_weighted_threshold_circuit(weights: Sequence[int], t: int) -> C.Circuit:
-    """Circuit over N inputs computing sum_i w_i b_i >= t."""
-    n = len(weights)
-    wmax = max(weights)
+def emit_weighted_ge(c: C.Circuit, member_ids: Sequence[int], weights: Sequence[int],
+                     t: int) -> int:
+    """Emit gates computing sum_i w_i b_i >= t over existing circuit nodes.
+
+    ``member_ids`` may be inputs or gate outputs (sub-queries), so weighted
+    thresholds compose inside larger query circuits.  Returns the output
+    node id.
+    """
+    if len(member_ids) != len(weights):
+        raise ValueError(f"{len(weights)} weights for {len(member_ids)} members")
     total = sum(weights)
-    c = C.Circuit(n, [], [])
     if t <= 0:
-        c.outputs = [C.CONST1]
-        return c
+        return C.CONST1
     if t > total:
-        c.outputs = [C.CONST0]
-        return c
+        return C.CONST0
+    wmax = max(weights)
     levels = wmax.bit_length()
     # per-bit-level Hamming weights (LSB-first digit vectors)
     acc_bits: list = []  # binary number, LSB first, accumulating shifted sums
     acc_max = 0
     for j in range(levels):
-        members = [i for i in range(n) if (weights[i] >> j) & 1]
+        members = [m for m, w in zip(member_ids, weights) if (w >> j) & 1]
         if not members:
             continue
         digits = C.sideways_sum_bits(c, members)  # weight of this level
@@ -66,18 +68,26 @@ def build_weighted_threshold_circuit(weights: Sequence[int], t: int) -> C.Circui
             acc_max = acc_max + level_max
             acc_bits = C._ripple_add(c, a, b, acc_max)
             acc_bits = acc_bits[: max(1, acc_max.bit_length())]
-    out = C.ge_const(c, acc_bits, t)
-    c.outputs = [out]
+    return C.ge_const(c, acc_bits, t)
+
+
+def build_weighted_threshold_circuit(weights: Sequence[int], t: int) -> C.Circuit:
+    """Circuit over N inputs computing sum_i w_i b_i >= t."""
+    n = len(weights)
+    c = C.Circuit(n, [], [])
+    c.outputs = [emit_weighted_ge(c, list(range(n)), weights, t)]
     return c.optimized()
 
 
-@partial(jax.jit, static_argnames=("weights", "t"))
 def weighted_threshold_decomposed(bitmaps: jax.Array, weights: tuple, t: int) -> jax.Array:
-    """Evaluate the decomposed weighted threshold over packed bitmaps."""
-    bitmaps = jnp.asarray(bitmaps, WORD_DTYPE)
-    circ = build_weighted_threshold_circuit(list(weights), t)
-    (out,) = circ.evaluate([bitmaps[i] for i in range(bitmaps.shape[0])])
-    return out
+    """Evaluate the decomposed weighted threshold over packed bitmaps.
+
+    .. deprecated:: shim over ``repro.query`` (``Weighted(weights, t)``
+       through the compiled-circuit cache); prefer ``BitmapIndex.execute``.
+    """
+    from repro.query import Weighted, execute
+
+    return execute(bitmaps, Weighted(tuple(int(w) for w in weights), int(t)))
 
 
 def replication_gate_cost(weights: Sequence[int], t: int) -> int:

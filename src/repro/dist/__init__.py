@@ -1,0 +1,10 @@
+"""Distributed substrate: sharding context, gradient compression, pipeline.
+
+``context`` carries the active :class:`ShardingRules` so model code can
+express sharding with *logical* axis names (``batch``, ``heads``...) and run
+unchanged both unsharded (unit tests) and SPMD-partitioned (train/serve).
+``compression`` implements the int8 ring all-reduce with error feedback;
+``pipeline`` the microbatch pipeline schedule over a mesh axis.
+"""
+
+from .context import ShardingRules, axis_size, constrain, get_rules, use_rules

@@ -1,0 +1,112 @@
+"""Gradient compression: int8 ring all-reduce with error feedback.
+
+The fp32 all-reduce moves ``2 (n-1)/n`` of the gradient bytes per device;
+quantising each hop to int8 (per-tensor absmax scale) cuts the wire bytes
+4x.  The quantisation bias is kept bounded across steps by error feedback:
+the residual of each lossy reduction is added back into the next step's
+gradient before compression (Karimireddy et al. style).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "quantize_int8",
+    "dequantize_int8",
+    "ErrorFeedback",
+    "collective_bytes_saved",
+]
+
+
+def quantize_int8(x: jax.Array):
+    """Per-tensor absmax int8 quantisation; returns (q, scale)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-30) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def _ring_allreduce_int8(x: jax.Array, axis_name: str, n: int) -> jax.Array:
+    """All-reduce (sum) over ``axis_name`` with int8-quantised hops.
+
+    Runs inside ``shard_map`` as the standard two-phase ring: a
+    reduce-scatter (n-1 chunk hops, partial sums re-quantised per hop)
+    followed by an all-gather in which each fully-reduced chunk is
+    quantised ONCE by its owner and relayed verbatim -- so every device
+    (owners included) decodes the *same* int8 payload and the result is
+    bit-identical across the ring, which data-parallel training needs.
+    Wire bytes per device: 2 (n-1)/n chunks of int8 = the fp32 psum's / 4.
+    """
+    perm = [(i, (i + 1) % n) for i in range(n)]
+    shape = x.shape
+    flat = x.reshape(-1)
+    size = flat.shape[0]
+    pad = (-size) % n
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    chunks = flat.reshape(n, -1)
+    idx = jax.lax.axis_index(axis_name)
+
+    # reduce-scatter: at step s device i sends its running sum of chunk
+    # (i - s) mod n; after n-1 steps device i owns chunk (i + 1) mod n
+    def rs_step(chunks, s):
+        send = jnp.take(chunks, (idx - s) % n, axis=0)
+        q, scale = quantize_int8(send)
+        q = jax.lax.ppermute(q, axis_name, perm)
+        scale = jax.lax.ppermute(scale, axis_name, perm)
+        return chunks.at[(idx - s - 1) % n].add(dequantize_int8(q, scale)), None
+
+    chunks, _ = jax.lax.scan(rs_step, chunks, jnp.arange(n - 1))
+
+    # all-gather: owner quantises its chunk once; the payload is forwarded
+    # unchanged so every device writes identical decoded values
+    own = (idx + 1) % n
+    q, scale = quantize_int8(jnp.take(chunks, own, axis=0))
+    chunks = chunks.at[own].set(dequantize_int8(q, scale))
+
+    def ag_step(carry, s):
+        chunks, q, scale = carry
+        q = jax.lax.ppermute(q, axis_name, perm)
+        scale = jax.lax.ppermute(scale, axis_name, perm)
+        chunks = chunks.at[(idx - s) % n].set(dequantize_int8(q, scale))
+        return (chunks, q, scale), None
+
+    (chunks, _, _), _ = jax.lax.scan(ag_step, (chunks, q, scale), jnp.arange(n - 1))
+    return chunks.reshape(-1)[:size].reshape(shape)
+
+
+class ErrorFeedback:
+    """Residual accumulator making lossy gradient reduction unbiased-ish.
+
+    ``apply(grads, reduce_fn)`` adds the stored residual into ``grads``,
+    runs the (lossy) ``reduce_fn``, and stores the new residual
+    ``corrected - reduced`` so compression errors cancel over steps instead
+    of compounding.
+    """
+
+    def __init__(self):
+        self.residual = None
+
+    def apply(self, grads, reduce_fn):
+        if self.residual is None:
+            self.residual = jax.tree.map(jnp.zeros_like, grads)
+        corrected = jax.tree.map(jnp.add, grads, self.residual)
+        reduced = reduce_fn(corrected)
+        self.residual = jax.tree.map(jnp.subtract, corrected, reduced)
+        return reduced
+
+
+def collective_bytes_saved(n_elems: int, n_devices: int) -> dict:
+    """Wire-byte accounting: fp32 psum ring vs int8 ring (per device)."""
+    hops = 2 * (n_devices - 1) / n_devices  # reduce-scatter + all-gather
+    fp32 = hops * n_elems * 4
+    int8 = hops * n_elems * 1
+    return {
+        "fp32_psum_bytes": fp32,
+        "int8_ring_bytes": int8,
+        "saved_bytes": fp32 - int8,
+    }

@@ -1,0 +1,112 @@
+"""Logical-axis sharding context.
+
+Model code calls ``constrain(x, "batch", None, "heads", None)`` with *logical*
+axis names; the active :class:`ShardingRules` (installed with ``use_rules``)
+maps them to mesh axes and applies ``with_sharding_constraint``.  With no
+rules installed every call is the identity, so the same code runs unsharded
+in unit tests and SPMD-partitioned under a mesh.
+
+Assignments that do not divide the dimension fall back to replicated --
+rules are best effort by construction (same convention as launch/sharding).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from contextlib import contextmanager
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["ShardingRules", "use_rules", "get_rules", "constrain", "axis_size"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Maps logical axis names to mesh axes.
+
+    ``batch`` spreads over ``batch_axes`` (data-parallel, possibly multi-axis
+    e.g. ``("pod", "data")``) unless ``batch_shardable`` is off (uneven
+    global batch); ``heads`` / ``ff`` / ``vocab`` / ``model`` over the
+    tensor-parallel ``model_axis``; ``seq`` / ``kv_seq`` over ``seq_axis``
+    (defaulting to the model axis) when ``seq_sharded`` is enabled.
+    """
+
+    mesh: Mesh
+    batch_axes: tuple = ("data",)
+    model_axis: str = "model"
+    seq_axis: str | None = None
+    batch_shardable: bool = True
+    seq_sharded: bool = False
+
+    def physical(self, logical: str | None):
+        if logical is None:
+            return None
+        names = set(self.mesh.axis_names)
+        if logical == "batch":
+            if not self.batch_shardable:
+                return None
+            axes = tuple(a for a in self.batch_axes if a in names)
+            return axes if axes else None
+        if logical in ("heads", "ff", "vocab", "model", "feature"):
+            return self.model_axis if self.model_axis in names else None
+        if logical in ("seq", "kv_seq"):
+            if not self.seq_sharded:
+                return None
+            axis = self.seq_axis or self.model_axis
+            return axis if axis in names else None
+        return None
+
+
+_STATE = threading.local()
+
+
+def get_rules() -> ShardingRules | None:
+    return getattr(_STATE, "rules", None)
+
+
+@contextmanager
+def use_rules(rules: ShardingRules):
+    prev = get_rules()
+    _STATE.rules = rules
+    try:
+        yield rules
+    finally:
+        _STATE.rules = prev
+
+
+def axis_size(axis: str) -> int:
+    """Size of a mesh axis under the active rules (1 when unsharded)."""
+    rules = get_rules()
+    if rules is None:
+        return 1
+    return dict(zip(rules.mesh.axis_names, rules.mesh.devices.shape)).get(axis, 1)
+
+
+def _axes_size(mesh: Mesh, axes) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if isinstance(axes, str):
+        return sizes.get(axes, 1)
+    return int(np.prod([sizes.get(a, 1) for a in axes]))
+
+
+def constrain(x, *logical_axes):
+    """Apply a sharding constraint expressed with logical axis names.
+
+    Identity when no rules are installed.  Entries that do not divide their
+    dimension are dropped (replicated) rather than erroring.
+    """
+    rules = get_rules()
+    if rules is None:
+        return x
+    if len(logical_axes) != x.ndim:
+        raise ValueError(f"{len(logical_axes)} axis names for rank-{x.ndim} array")
+    entries = []
+    for dim, logical in zip(x.shape, logical_axes):
+        phys = rules.physical(logical)
+        if phys is None or dim % _axes_size(rules.mesh, phys) != 0:
+            entries.append(None)
+        else:
+            entries.append(phys)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, P(*entries)))

@@ -3,37 +3,41 @@
 On the CPU container the kernels run with interpret=True (the Pallas
 interpreter executes the kernel body in Python); on TPU backends the same
 call lowers through Mosaic.  ``INTERPRET`` auto-detects.
+
+.. deprecated:: these wrappers are thin shims over ``repro.query`` with an
+   explicit ``backend="fused"`` override; prefer ``BitmapIndex.execute``,
+   which also picks the fused backend by itself on TPU and lets fused
+   queries compose (one kernel launch for a whole expression tree).
 """
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
-from .threshold_ssum import pick_block_words, threshold_pallas
-
-INTERPRET = jax.default_backend() != "tpu"
+from .threshold_ssum import INTERPRET, pick_block_words, threshold_pallas  # noqa: F401
 
 
 def fused_threshold(bitmaps: jax.Array, t: int, block_words: int | None = None) -> jax.Array:
     """Fused theta(T, .) over packed bitmaps uint32[N, n_words]."""
-    return threshold_pallas(bitmaps, t, block_words=block_words, interpret=INTERPRET)
+    from repro.query import Threshold, execute
+
+    return execute(bitmaps, Threshold(t), backend="fused", block_words=block_words)
 
 
 def fused_symmetric(bitmaps: jax.Array, truth, block_words: int | None = None) -> jax.Array:
     """Fused arbitrary symmetric function given truth[w] for w = 0..N."""
-    return threshold_pallas(
-        bitmaps, None, truth=tuple(bool(x) for x in truth), block_words=block_words,
-        interpret=INTERPRET,
-    )
+    from repro.query import Sym, execute
+
+    return execute(bitmaps, Sym(tuple(truth)), backend="fused", block_words=block_words)
 
 
 def fused_interval(bitmaps: jax.Array, lo: int, hi: int) -> jax.Array:
-    n = bitmaps.shape[0]
-    return fused_symmetric(bitmaps, tuple(lo <= w <= hi for w in range(n + 1)))
+    from repro.query import Interval, execute
+
+    return execute(bitmaps, Interval(lo, hi), backend="fused")
 
 
 def fused_weighted_threshold(bitmaps: jax.Array, weights, t: int) -> jax.Array:
     """Fused weighted threshold (binary weight decomposition, core/weighted)."""
-    return threshold_pallas(
-        bitmaps, t, weights=tuple(int(w) for w in weights), interpret=INTERPRET
-    )
+    from repro.query import Weighted, execute
+
+    return execute(bitmaps, Weighted(tuple(int(w) for w in weights), t), backend="fused")

@@ -32,6 +32,11 @@ from repro.core import circuits as _ckt
 
 LANE_WORDS = 1024  # words per (8,128) int32 vreg tile
 
+# On the CPU container the kernels run with interpret=True (the Pallas
+# interpreter executes the kernel body in Python); on TPU backends the same
+# call lowers through Mosaic.
+INTERPRET = jax.default_backend() != "tpu"
+
 
 def pick_block_words(n: int, n_words: int, vmem_budget_bytes: int = 4 * 1024 * 1024) -> int:
     """Largest lane-aligned block s.t. ~2N live rows fit in the VMEM budget."""
@@ -42,14 +47,54 @@ def pick_block_words(n: int, n_words: int, vmem_budget_bytes: int = 4 * 1024 * 1
     return min(bw, total)
 
 
-def _threshold_kernel(in_ref, out_ref, *, circuit: _ckt.Circuit, n: int):
+def _circuit_kernel(in_ref, out_ref, *, circuit: _ckt.Circuit, n: int):
     rows = [in_ref[i, :] for i in range(n)]
-    (out,) = circuit.evaluate(
+    outs = circuit.evaluate(
         rows,
         zeros=jnp.zeros_like(rows[0]),
         ones=jnp.full_like(rows[0], 0xFFFFFFFF),
     )
-    out_ref[:] = out
+    for j, out in enumerate(outs):
+        out_ref[j, :] = out
+
+
+def run_circuit_pallas(
+    bitmaps: jax.Array,
+    circuit: _ckt.Circuit,
+    *,
+    block_words: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Evaluate an arbitrary (multi-output) circuit fused in VMEM.
+
+    bitmaps: uint32[N, n_words] with N == circuit.n_inputs.  Returns
+    uint32[n_words] for a single-output circuit, uint32[k, n_words]
+    otherwise -- the batched-query path writes every output per tile while
+    the inputs are resident, so k queries cost one HBM sweep, not k.
+    """
+    bitmaps = jnp.asarray(bitmaps, jnp.uint32)
+    n, n_words = bitmaps.shape
+    if circuit.n_inputs != n:
+        raise ValueError(f"circuit has {circuit.n_inputs} inputs, bitmaps {n}")
+    k = len(circuit.outputs)
+    if block_words is None:
+        # budget VMEM for the k output rows of the batched-query path too,
+        # not just the ~2N live input/intermediate rows
+        block_words = pick_block_words(n + k, n_words)
+    padded = pl.cdiv(n_words, block_words) * block_words
+    if padded != n_words:
+        bitmaps = jnp.pad(bitmaps, ((0, 0), (0, padded - n_words)))
+    grid = (padded // block_words,)
+    out = pl.pallas_call(
+        functools.partial(_circuit_kernel, circuit=circuit, n=n),
+        grid=grid,
+        in_specs=[pl.BlockSpec((n, block_words), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((k, block_words), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((k, padded), jnp.uint32),
+        interpret=interpret,
+    )(bitmaps)
+    out = out[:, :n_words]
+    return out[0] if k == 1 else out
 
 
 @functools.partial(
@@ -86,18 +131,6 @@ def threshold_pallas(
         if t > n:
             return jnp.zeros((n_words,), jnp.uint32)
         circuit = _ckt.build_threshold_circuit(n, t, kind)
-    if block_words is None:
-        block_words = pick_block_words(n, n_words)
-    padded = pl.cdiv(n_words, block_words) * block_words
-    if padded != n_words:
-        bitmaps = jnp.pad(bitmaps, ((0, 0), (0, padded - n_words)))
-    grid = (padded // block_words,)
-    out = pl.pallas_call(
-        functools.partial(_threshold_kernel, circuit=circuit, n=n),
-        grid=grid,
-        in_specs=[pl.BlockSpec((n, block_words), lambda i: (0, i))],
-        out_specs=pl.BlockSpec((block_words,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((padded,), jnp.uint32),
-        interpret=interpret,
-    )(bitmaps)
-    return out[:n_words]
+    return run_circuit_pallas(
+        bitmaps, circuit, block_words=block_words, interpret=interpret
+    )

@@ -190,9 +190,13 @@ class HloModule:
                     traffic += 2.0 * byts * m
                 if op == "dot":
                     args = re.search(r"dot\(([^)]*)\)", line)
-                    lhs = args.group(1).split(",")[0].strip().lstrip("%") if args else ""
-                    lhs_sig = table.get(lhs, "")
-                    lhs_shapes, _ = _shape_info(lhs_sig)
+                    argstr = args.group(1) if args else ""
+                    # modern XLA prints typed operands inline
+                    # (dot(f32[64,64]{1,0} %x, ...)): first shape = lhs
+                    lhs_shapes, _ = _shape_info(argstr)
+                    if not lhs_shapes:  # bare %name operands: symbol table
+                        lhs = argstr.split(",")[0].strip().lstrip("%")
+                        lhs_shapes, _ = _shape_info(table.get(lhs, ""))
                     cdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
                     k = 1
                     if lhs_shapes and cdims:

@@ -11,13 +11,24 @@ state (the dry-run must set XLA_FLAGS before any jax initialisation).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:  # jax >= 0.5: explicit axis types
+    from jax.sharding import AxisType
+
+    def _make_mesh(shape, axes) -> Mesh:
+        return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+except ImportError:  # older jax: Auto is the only behaviour
+
+    def _make_mesh(shape, axes) -> Mesh:
+        return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int | None = None, model: int = 1) -> Mesh:
@@ -25,8 +36,7 @@ def make_host_mesh(data: int | None = None, model: int = 1) -> Mesh:
     n = len(jax.devices())
     if data is None:
         data = n // model
-    axes = ("data", "model")
-    return jax.make_mesh((data, model), axes, axis_types=(AxisType.Auto,) * 2)
+    return _make_mesh((data, model), ("data", "model"))
 
 
 def mesh_axis_sizes(mesh: Mesh) -> dict:

@@ -1,0 +1,70 @@
+"""Declarative, composable queries over a bitmap index.
+
+The paper's closing observation -- "the result of our computation is again a
+bitmap which can be further processed within a bitmap index" -- promoted to
+the API: queries are expression trees built from symmetric-function leaves
+(:class:`Threshold`, :class:`Interval`, :class:`Exactly`, :class:`Parity`,
+:class:`Majority`, :class:`Weighted`, :class:`Sym`), named columns
+(:class:`Col`), and boolean combinators (:class:`And`, :class:`Or`,
+:class:`Not`, :class:`AndNot`), executed against a :class:`BitmapIndex`::
+
+    idx = BitmapIndex.from_dense(on_sale, names=store_names)
+    hot = idx.execute(And(Interval(2, 10), Not(Threshold(15))))
+
+Execution is planner-driven (``core.planner``): a whole expression tree
+compiles into ONE shared Boolean circuit (sub-queries share the sideways-sum
+adder via CSE) evaluated by XLA or the fused Pallas kernel, while bare
+thresholds route to the specialised backends (wide OR/AND, LOOPED, streaming
+scancount, block-RLE pruning, host list algorithms) the paper recommends.
+Compiled circuits and their jitted evaluators live in a per-process cache
+keyed by (query shape, N, n_words, backend).
+"""
+
+from .expr import (
+    And,
+    AndNot,
+    Col,
+    Exactly,
+    Interval,
+    Majority,
+    Not,
+    Or,
+    Parity,
+    Query,
+    Sym,
+    Threshold,
+    Weighted,
+)
+from .compile import build_query_circuit
+from .executors import THRESHOLD_BACKENDS, run_threshold_backend
+from .index import (
+    BitmapIndex,
+    IndexStats,
+    clear_compiled_cache,
+    compiled_cache_info,
+    execute,
+)
+
+__all__ = [
+    "Query",
+    "Col",
+    "Threshold",
+    "Interval",
+    "Exactly",
+    "Parity",
+    "Majority",
+    "Weighted",
+    "Sym",
+    "And",
+    "Or",
+    "Not",
+    "AndNot",
+    "BitmapIndex",
+    "IndexStats",
+    "execute",
+    "build_query_circuit",
+    "run_threshold_backend",
+    "THRESHOLD_BACKENDS",
+    "compiled_cache_info",
+    "clear_compiled_cache",
+]

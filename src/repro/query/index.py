@@ -1,0 +1,346 @@
+"""`BitmapIndex`: packed columns + statistics + planner-driven execution.
+
+The index owns the data (``uint32[N, n_words]``, one row per named column),
+its statistics (per-column density, clean-tile fraction, cardinality --
+index-build-time work, computed on request by :meth:`BitmapIndex.stats` and
+then consulted by the planner), and execution:
+
+  * :meth:`execute` plans a query expression (``core.planner.plan_query``)
+    and routes it -- bare thresholds to the specialised backends, everything
+    else through ONE compiled circuit;
+  * :meth:`execute_many` compiles independent circuit-family queries into a
+    single multi-output circuit evaluated in one jitted call;
+  * results are packed bitmaps (tail-masked to the universe size), so they
+    can be fed back in as virtual columns with :meth:`add_column` -- the
+    paper's "the result ... can be further processed within a bitmap index".
+
+Compiled circuits and their jitted evaluators live in a per-process cache
+keyed by (query shape, column names, backend, block size); data never enters
+the key, so every index with the same schema shares the cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bitmaps import WORD_DTYPE, cardinality, pack, tail_mask
+from repro.core.planner import CIRCUIT_BACKENDS, Plan, plan_query
+
+from .compile import build_query_circuit
+from .expr import Col, Query, Threshold, as_query
+from .executors import THRESHOLD_BACKENDS, run_threshold_backend
+
+__all__ = [
+    "BitmapIndex",
+    "IndexStats",
+    "execute",
+    "compiled_cache_info",
+    "clear_compiled_cache",
+]
+
+# ---------------------------------------------------------------------------
+# Per-process compiled-circuit / jit cache
+# ---------------------------------------------------------------------------
+
+_COMPILED: dict[tuple, object] = {}
+_CACHE_INFO = {"hits": 0, "misses": 0}
+
+# bare thresholds whose backend is itself a circuit join multi-query batches
+_BATCHABLE = CIRCUIT_BACKENDS + ("ssum", "treeadd", "srtckt", "sopckt")
+
+
+def compiled_cache_info() -> dict:
+    """Hits/misses/size of the per-process compiled-circuit cache."""
+    return {"size": len(_COMPILED), **_CACHE_INFO}
+
+
+def clear_compiled_cache() -> None:
+    _COMPILED.clear()
+    _CACHE_INFO["hits"] = 0
+    _CACHE_INFO["misses"] = 0
+
+
+def _fused_available() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Statistics
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexStats:
+    """Cheap per-index statistics feeding the planner's decision rules."""
+
+    n: int
+    n_words: int
+    r: int
+    cardinalities: tuple
+    densities: tuple
+    density: float  # mean over columns
+    clean_fraction: float  # fraction of (column, tile) pairs that are runs
+    tile_words: int
+
+
+# ---------------------------------------------------------------------------
+# The index
+# ---------------------------------------------------------------------------
+
+
+class BitmapIndex:
+    """A queryable collection of named packed bitmaps over one universe."""
+
+    def __init__(self, columns, names=None, *, r: int | None = None):
+        cols = jnp.asarray(columns, WORD_DTYPE)
+        if cols.ndim != 2:
+            raise ValueError(f"expected uint32[N, n_words], got shape {cols.shape}")
+        n, n_words = cols.shape
+        if names is None:
+            names = tuple(f"c{i}" for i in range(n))
+        else:
+            names = tuple(str(x) for x in names)
+            if len(names) != n:
+                raise ValueError(f"{len(names)} names for {n} columns")
+            if len(set(names)) != n:
+                raise ValueError("duplicate column names")
+        self._columns = cols
+        self._names = names
+        self._slot = {name: i for i, name in enumerate(names)}
+        self.r = int(r) if r is not None else n_words * 32
+        if self.r > n_words * 32 or self.r <= 0:
+            raise ValueError(f"universe size {self.r} does not fit {n_words} words")
+        self._stats: IndexStats | None = None
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def from_dense(cls, bits, names=None) -> "BitmapIndex":
+        """Build from a dense boolean/int array [N, r]."""
+        bits = jnp.asarray(bits)
+        return cls(pack(bits), names, r=bits.shape[-1])
+
+    @classmethod
+    def from_columns(cls, columns: dict, *, r: int | None = None) -> "BitmapIndex":
+        """Build from a {name: packed uint32[n_words]} mapping."""
+        if not columns:
+            raise ValueError("need at least one column")
+        names = tuple(columns)
+        stacked = jnp.stack([jnp.asarray(columns[k], WORD_DTYPE) for k in names])
+        return cls(stacked, names, r=r)
+
+    # -- basic accessors ---------------------------------------------------
+    @property
+    def columns(self) -> jax.Array:
+        return self._columns
+
+    @property
+    def names(self) -> tuple:
+        return self._names
+
+    @property
+    def n(self) -> int:
+        return self._columns.shape[0]
+
+    @property
+    def n_words(self) -> int:
+        return self._columns.shape[1]
+
+    def __len__(self) -> int:
+        return self.n
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._slot
+
+    def __getitem__(self, name: str) -> Col:
+        """Sugar: ``idx["a"] & ~idx["b"]`` builds an expression."""
+        if name not in self._slot:
+            raise KeyError(f"unknown column {name!r}")
+        return Col(name)
+
+    def column(self, name: str) -> jax.Array:
+        if name not in self._slot:
+            raise KeyError(
+                f"unknown column {name!r}; index has {sorted(self._slot)[:8]}..."
+            )
+        return self._columns[self._slot[name]]
+
+    def add_column(self, name: str, packed) -> "BitmapIndex":
+        """Append a (virtual) column -- e.g. a previous query result."""
+        if name in self._slot:
+            raise ValueError(f"column {name!r} already exists")
+        row = jnp.asarray(packed, WORD_DTYPE)
+        if row.shape != (self.n_words,):
+            raise ValueError(f"expected shape ({self.n_words},), got {row.shape}")
+        self._columns = jnp.concatenate([self._columns, row[None]], axis=0)
+        self._names = self._names + (name,)
+        self._slot[name] = len(self._names) - 1
+        self._stats = None
+        return self
+
+    # -- statistics --------------------------------------------------------
+    def stats(self, tile_words: int = 64, refresh: bool = False) -> IndexStats:
+        """Compute (and cache) planner statistics.
+
+        This is index-build-time work (one host pass over the data); the
+        planner only uses data-aware rules (RBMRG, DSK) after it has run.
+        """
+        if self._stats is not None and not refresh:
+            return self._stats
+        from repro.core.blockrle import classify_tiles
+
+        cards = tuple(int(x) for x in np.asarray(cardinality(self._columns)))
+        dens = tuple(c / self.r for c in cards)
+        stats = classify_tiles(self._columns, tile_words=tile_words)
+        self._stats = IndexStats(
+            n=self.n,
+            n_words=self.n_words,
+            r=self.r,
+            cardinalities=cards,
+            densities=dens,
+            density=float(np.mean(dens)) if dens else 0.0,
+            clean_fraction=stats.clean_fraction,
+            tile_words=tile_words,
+        )
+        return self._stats
+
+    # -- planning ----------------------------------------------------------
+    def explain(self, query) -> Plan:
+        """The plan :meth:`execute` would run (stats-aware once computed)."""
+        st = self._stats
+        return plan_query(
+            as_query(query),
+            self.n,
+            density=st.density if st else None,
+            clean_fraction=st.clean_fraction if st else None,
+            fused_available=_fused_available(),
+        )
+
+    # -- execution ---------------------------------------------------------
+    def execute(self, query, *, backend: str | None = None,
+                block_words: int | None = None) -> jax.Array:
+        """Evaluate one expression; returns a packed (tail-masked) bitmap."""
+        q = as_query(query)
+        plan = Plan(backend, "caller override") if backend else self.explain(q)
+        return self._mask(self._run(q, plan.algorithm, block_words))
+
+    def execute_many(self, queries, *, backend: str | None = None,
+                     block_words: int | None = None) -> list:
+        """Evaluate independent queries; circuit-family ones are compiled
+        into a single multi-output circuit and run as ONE jitted call."""
+        qs = [as_query(q) for q in queries]
+        algs = [backend or self.explain(q).algorithm for q in qs]
+        batch: list[int] = []
+        # an explicit non-circuit backend override is honoured per query;
+        # batching only applies when the circuit family does the work
+        if backend is None or backend in CIRCUIT_BACKENDS:
+            for i, (q, alg) in enumerate(zip(qs, algs)):
+                if alg in CIRCUIT_BACKENDS or (
+                    alg in _BATCHABLE and self._bare_threshold(q) is not None
+                ):
+                    batch.append(i)
+        results: dict[int, jax.Array] = {}
+        if len(batch) > 1:
+            cbackend = backend or ("fused" if _fused_available() else "circuit")
+            fn = self._compiled(tuple(qs[i] for i in batch), cbackend, block_words)
+            stacked = fn(self._columns)
+            if stacked.ndim == 1:
+                stacked = stacked[None]
+            for j, i in enumerate(batch):
+                results[i] = stacked[j]
+        else:
+            batch = []
+        for i, (q, alg) in enumerate(zip(qs, algs)):
+            if i not in results:
+                results[i] = self._run(q, alg, block_words)
+        return [self._mask(results[i]) for i in range(len(qs))]
+
+    def count(self, query, **kw) -> int:
+        """Cardinality of the query result."""
+        return int(cardinality(self.execute(query, **kw)))
+
+    # -- internals ---------------------------------------------------------
+    def _bare_threshold(self, q: Query):
+        """(rows, t) when q is a Threshold over plain columns, else None."""
+        if type(q) is not Threshold:
+            return None
+        if q.over is None:
+            return self._columns, q.t
+        if not all(type(m) is Col for m in q.over):
+            return None
+        for m in q.over:
+            if m.name not in self._slot:
+                raise KeyError(
+                    f"unknown column {m.name!r}; index has {sorted(self._slot)[:8]}..."
+                )
+        slots = [self._slot[m.name] for m in q.over]
+        return self._columns[jnp.asarray(slots)], q.t
+
+    def _run(self, q: Query, alg: str, block_words) -> jax.Array:
+        if alg == "column":
+            return self.column(q.name)
+        if alg in THRESHOLD_BACKENDS:
+            bare = self._bare_threshold(q)
+            if bare is None:
+                if alg in CIRCUIT_BACKENDS:  # "fused" doubles as both
+                    return self._compiled((q,), alg, block_words)(self._columns)
+                raise ValueError(
+                    f"backend {alg!r} only executes bare Threshold queries; "
+                    f"use 'circuit' or 'fused' for {type(q).__name__}"
+                )
+            rows, t = bare
+            return run_threshold_backend(rows, t, alg, block_words=block_words)
+        if alg in CIRCUIT_BACKENDS:
+            return self._compiled((q,), alg, block_words)(self._columns)
+        raise ValueError(f"unknown backend {alg!r}")
+
+    def _compiled(self, qs: tuple, backend: str, block_words):
+        key = (tuple(q.key() for q in qs), self._names, backend, block_words)
+        fn = _COMPILED.get(key)
+        if fn is not None:
+            _CACHE_INFO["hits"] += 1
+            return fn
+        _CACHE_INFO["misses"] += 1
+        circ = build_query_circuit(qs, self.n, self._names)
+        if backend == "fused":
+            from repro.kernels.threshold_ssum import INTERPRET, run_circuit_pallas
+
+            def run(bm, _c=circ):
+                return run_circuit_pallas(
+                    bm, _c, block_words=block_words, interpret=INTERPRET
+                )
+
+        else:
+
+            def run(bm, _c=circ):
+                outs = _c.evaluate([bm[i] for i in range(bm.shape[0])])
+                return outs[0] if len(outs) == 1 else jnp.stack(outs)
+
+        fn = jax.jit(run)
+        _COMPILED[key] = fn
+        return fn
+
+    def _mask(self, out: jax.Array) -> jax.Array:
+        if self.r >= self.n_words * 32:
+            return out
+        mask = np.zeros(self.n_words, dtype=np.uint32)
+        full = self.r // 32
+        mask[:full] = 0xFFFFFFFF
+        if self.r % 32:
+            mask[full] = tail_mask(self.r)
+        return jnp.bitwise_and(out, jnp.asarray(mask))
+
+
+def execute(bitmaps, query, *, r: int | None = None, backend: str | None = None,
+            block_words: int | None = None) -> jax.Array:
+    """One-shot functional form: execute ``query`` over packed bitmaps.
+
+    Builds a transient default-named :class:`BitmapIndex`; the compiled
+    cache is keyed by schema, so repeated calls with the same shape reuse
+    compilations.  Kept as the substrate for the legacy free-function shims
+    (``core.threshold.threshold`` etc.).
+    """
+    idx = BitmapIndex(bitmaps, r=r)
+    return idx.execute(query, backend=backend, block_words=block_words)

@@ -1,9 +1,11 @@
 """Batched serving engine: continuous batching over a fixed slot pool.
 
-Slot occupancy is tracked as a *packed bitmap* and slot-selection queries
-(free slots, finished slots, slots past a length threshold) run through the
-paper's threshold/symmetric machinery -- the serving layer is a natural
-bitmap-index consumer (requests x predicates).
+Slot state is tracked as a *bitmap index* (one criteria column per
+predicate over slot positions) and slot-selection queries (free slots,
+slots near the length limit, admission picks) are query expressions
+executed through ``repro.query`` -- the serving layer is a natural
+bitmap-index consumer (requests x predicates), and composed selections
+like "occupied AND NOT near the limit" stay single fused queries.
 
 The device-side decode is the jitted ``decode_step`` from the model zoo;
 prefill uses ``forward(mode='prefill')``.  Greedy sampling by default.
@@ -22,6 +24,7 @@ from repro.configs.base import ModelConfig
 from repro.core.bitmaps import from_positions, to_positions_np
 from repro.models import decode_step, forward, init_cache
 from repro.models.model import logits_from_hidden
+from repro.query import And, BitmapIndex, Col, Not, Query
 
 
 @dataclasses.dataclass
@@ -45,14 +48,55 @@ class ServeEngine:
         self.pos = np.zeros(batch_slots, np.int64)
         self._decode = jax.jit(partial(decode_step, cfg=cfg))
         self.step_count = 0
+        self._slot_version = 0  # bumped whenever slot occupancy/positions move
+        self._slot_cache: dict = {}
 
-    # -- slot bitmaps ----------------------------------------------------
+    # -- slot bitmap index -----------------------------------------------
     def slot_bitmap(self, predicate: Callable[[Request | None], bool]):
+        """Packed bitmap of slots whose request satisfies ``predicate``."""
         idx = [i for i, r in enumerate(self.requests) if predicate(r)]
         return from_positions(idx, self.slots)
 
+    def slot_index(self, near_limit_margin: int = 8) -> BitmapIndex:
+        """Criteria columns over slot positions, ready for query expressions:
+        ``occupied`` (a request holds the slot) and ``near_limit`` (its
+        position is within ``near_limit_margin`` of the sequence cap).
+
+        Cached per engine state version -- ``free_slots()`` sits in the
+        admission inner loop, so rebuilding the index (and re-running its
+        queries) only happens after a submit or decode step changed state.
+        """
+        key = (self._slot_version, near_limit_margin)
+        cached = self._slot_cache.get(key)
+        if cached is not None:
+            return cached
+        occ, near = [], []
+        for i, r in enumerate(self.requests):
+            if r is None:
+                continue
+            occ.append(i)
+            if self.pos[i] >= self.max_seq - near_limit_margin:
+                near.append(i)
+        idx = BitmapIndex.from_columns(
+            {
+                "occupied": from_positions(occ, self.slots),
+                "near_limit": from_positions(near, self.slots),
+            },
+            r=self.slots,
+        )
+        self._slot_cache = {key: idx}
+        return idx
+
+    def select_slots(self, query: Query) -> list[int]:
+        """Slot ids matching a query expression over the criteria columns."""
+        return to_positions_np(self.slot_index().execute(query)).tolist()
+
     def free_slots(self) -> list[int]:
-        return to_positions_np(self.slot_bitmap(lambda r: r is None)).tolist()
+        return self.select_slots(Not(Col("occupied")))
+
+    def draining_slots(self) -> list[int]:
+        """Occupied slots about to hit the length cap (eviction candidates)."""
+        return self.select_slots(And(Col("occupied"), Col("near_limit")))
 
     # -- admission ---------------------------------------------------------
     def submit(self, req: Request) -> bool:
@@ -71,6 +115,7 @@ class ServeEngine:
             lambda full, new: full.at[:, slot : slot + 1].set(new), self.cache, caches
         )
         self.pos[slot] = len(req.prompt)
+        self._slot_version += 1
         return True
 
     # -- decode ------------------------------------------------------------
@@ -99,6 +144,7 @@ class ServeEngine:
                 r.done = True
                 self.requests[i] = None  # release slot
         self.step_count += 1
+        self._slot_version += 1
         return emitted
 
     def run_until_drained(self, pending: list[Request], max_steps: int = 10_000):

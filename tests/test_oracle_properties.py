@@ -1,0 +1,103 @@
+"""Oracle property suite: every algorithm in ALGORITHMS (and the query API)
+against SCANCOUNT on randomized (N, T, n_words) grids, including the
+degenerate T=1 / T=N / T>N edges, plus weighted replication vs binary
+decomposition equivalence.  Deterministic (seeded) -- no hypothesis needed."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bitmaps import pack, unpack
+from repro.core.threshold import ALGORITHMS, threshold, weighted_threshold
+from repro.core.weighted import weighted_threshold_decomposed
+from repro.query import BitmapIndex, Threshold
+
+# (n, r, density); r values straddle word boundaries
+GRID = [
+    (2, 31, 0.5),
+    (3, 64, 0.9),
+    (5, 100, 0.05),
+    (9, 257, 0.3),
+    (17, 130, 0.5),
+    (33, 96, 0.7),
+]
+
+# wide_or / wide_and only exist at the degenerate ends; sopckt blows up
+# combinatorially and is capped to tiny (N, T) like the paper does
+_GENERAL = tuple(a for a in ALGORITHMS if a not in ("wide_or", "wide_and", "sopckt"))
+
+
+def _oracle_and_bm(n, r, density, seed):
+    rng = np.random.default_rng(seed)
+    bits = rng.random((n, r)) < density
+    return bits.sum(0), pack(jnp.asarray(bits))
+
+
+def _ts(n):
+    """Thresholds including every degenerate edge."""
+    return sorted({1, 2, (n + 1) // 2, n - 1, n, n + 1, n + 3})
+
+
+@pytest.mark.parametrize("n,r,density", GRID)
+def test_all_algorithms_match_scancount(n, r, density):
+    counts, bm = _oracle_and_bm(n, r, density, seed=n * 7919 + r)
+    for t in _ts(n):
+        oracle = np.asarray(unpack(threshold(bm, t, "scancount"), r))
+        np.testing.assert_array_equal(oracle, counts >= t, err_msg=f"scancount t={t}")
+        for alg in _GENERAL:
+            if alg == "scancount":
+                continue
+            got = np.asarray(unpack(threshold(bm, t, alg), r))
+            np.testing.assert_array_equal(got, oracle, err_msg=f"{alg} t={t} n={n}")
+        # degenerate ends exercise the wide reductions too
+        if t == 1:
+            got = np.asarray(unpack(threshold(bm, t, "wide_or"), r))
+            np.testing.assert_array_equal(got, oracle, err_msg="wide_or")
+        if t == n:
+            got = np.asarray(unpack(threshold(bm, t, "wide_and"), r))
+            np.testing.assert_array_equal(got, oracle, err_msg="wide_and")
+
+
+def test_sopckt_small_against_oracle():
+    counts, bm = _oracle_and_bm(5, 70, 0.5, seed=3)
+    for t in (1, 2, 3, 5):
+        got = np.asarray(unpack(threshold(bm, t, "sopckt"), 70))
+        np.testing.assert_array_equal(got, counts >= t, err_msg=f"sopckt t={t}")
+
+
+@pytest.mark.parametrize("n,r,density", GRID[:4])
+def test_query_api_matches_scancount(n, r, density):
+    rng = np.random.default_rng(n * 31 + r)
+    bits = rng.random((n, r)) < density
+    counts = bits.sum(0)
+    idx = BitmapIndex.from_dense(jnp.asarray(bits))
+    for t in _ts(n):
+        got = np.asarray(unpack(idx.execute(Threshold(t)), r))
+        np.testing.assert_array_equal(got, counts >= t, err_msg=f"query t={t}")
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_weighted_replication_vs_decomposition(seed):
+    """Paper 2.3 replication == beyond-paper binary decomposition, and both
+    == the weighted counting oracle."""
+    rng = np.random.default_rng(seed)
+    n, r = 6, 150
+    bits = rng.random((n, r)) < 0.4
+    bm = pack(jnp.asarray(bits))
+    w = rng.integers(1, 7, n)
+    wcounts = (bits * w[:, None]).sum(0)
+    total = int(w.sum())
+    for t in sorted({1, 3, total // 2, total, total + 1}):
+        rep = np.asarray(unpack(weighted_threshold(bm, w.tolist(), t), r))
+        dec = np.asarray(unpack(weighted_threshold_decomposed(bm, tuple(w), t), r))
+        np.testing.assert_array_equal(rep, wcounts >= t, err_msg=f"replication t={t}")
+        np.testing.assert_array_equal(dec, wcounts >= t, err_msg=f"decomposed t={t}")
+
+
+def test_zero_weights_drop_inputs():
+    rng = np.random.default_rng(4)
+    bits = rng.random((4, 90)) < 0.5
+    bm = pack(jnp.asarray(bits))
+    w = (0, 2, 0, 3)
+    wcounts = (bits * np.array(w)[:, None]).sum(0)
+    got = np.asarray(unpack(weighted_threshold_decomposed(bm, w, 3), 90))
+    np.testing.assert_array_equal(got, wcounts >= 3)

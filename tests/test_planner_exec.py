@@ -1,0 +1,74 @@
+"""Every plan the planner can emit names a runnable executor (ISSUE fix:
+the seed's planner returned wide_or/wide_and/rbmrg_block/dsk which
+threshold() rejected)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bitmaps import pack, unpack
+from repro.core.planner import plan_query, plan_threshold
+from repro.core.threshold import ALGORITHMS, threshold
+from repro.query import Interval, Threshold, execute
+
+
+def _mk(n, r, density, seed=0):
+    rng = np.random.default_rng(seed)
+    bits = rng.random((n, r)) < density
+    return bits, pack(jnp.asarray(bits))
+
+
+# (n, t, planner kwargs, data density) covering every reachable branch
+SCENARIOS = [
+    (8, 1, {}, 0.3, "wide_or"),
+    (8, 8, {}, 0.3, "wide_and"),
+    (16, 2, {}, 0.3, "looped"),
+    (16, 8, {"clean_fraction": 0.9}, 0.02, "rbmrg_block"),
+    (16, 15, {"density": 1e-4, "on_device": False}, 0.005, "dsk"),
+    (16, 8, {}, 0.3, "fused"),
+    (16, 8, {"fused_available": False}, 0.3, "ssum"),
+    (2500, 700, {}, 0.3, "scancount_streaming"),
+]
+
+
+@pytest.mark.parametrize("n,t,kw,density,expected_alg", SCENARIOS)
+def test_every_reachable_plan_executes(n, t, kw, density, expected_alg):
+    plan = plan_threshold(n, t, **kw)
+    assert plan.algorithm == expected_alg, plan
+    assert plan.algorithm in ALGORITHMS
+    bits, bm = _mk(n, 300, density, seed=n * 31 + t)
+    got = np.asarray(unpack(threshold(bm, t, plan.algorithm), 300))
+    np.testing.assert_array_equal(got, bits.sum(0) >= t, err_msg=plan.algorithm)
+
+
+def test_all_algorithm_names_are_executable():
+    """threshold() accepts every name in ALGORITHMS (no planner orphan)."""
+    bits, bm = _mk(6, 200, 0.3, seed=5)
+    counts = bits.sum(0)
+    for alg in ALGORITHMS:
+        t = {"wide_or": 1, "wide_and": 6}.get(alg, 3)
+        got = np.asarray(unpack(threshold(bm, t, alg), 200))
+        np.testing.assert_array_equal(got, counts >= t, err_msg=alg)
+
+
+def test_wide_reductions_validate_t():
+    _, bm = _mk(6, 100, 0.5)
+    with pytest.raises(ValueError):
+        threshold(bm, 3, "wide_or")
+    with pytest.raises(ValueError):
+        threshold(bm, 3, "wide_and")
+
+
+def test_plan_query_names_resolve():
+    """plan_query outputs execute directly through the query layer."""
+    bits, bm = _mk(10, 300, 0.3, seed=9)
+    counts = bits.sum(0)
+    cases = [
+        (Threshold(1), counts >= 1),
+        (Threshold(5), counts >= 5),
+        (Interval(2, 6), (counts >= 2) & (counts <= 6)),
+        (Interval(2, 6) & ~Threshold(8), (counts >= 2) & (counts <= 6) & ~(counts >= 8)),
+    ]
+    for q, expect in cases:
+        plan = plan_query(q, 10)
+        got = np.asarray(unpack(execute(bm, q), 300))
+        np.testing.assert_array_equal(got, expect, err_msg=f"{q} via {plan.algorithm}")

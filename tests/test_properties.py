@@ -1,7 +1,15 @@
-"""Property-based tests (hypothesis) for the system's invariants."""
+"""Property-based tests (hypothesis) for the system's invariants.
+
+The deterministic randomized oracle suite lives in test_oracle_properties.py
+and does not need hypothesis; this module adds fuzzing on top when the
+dependency is available.
+"""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.bitmaps import bitmap_not, pack, unpack
 from repro.core.symmetric import exactly, interval, parity, symmetric

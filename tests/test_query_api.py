@@ -1,0 +1,220 @@
+"""Unified query API: expressions, BitmapIndex execution, cache, batching."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bitmaps import pack, unpack
+from repro.query import (
+    And,
+    AndNot,
+    BitmapIndex,
+    Col,
+    Exactly,
+    Interval,
+    Majority,
+    Not,
+    Or,
+    Parity,
+    Sym,
+    Threshold,
+    Weighted,
+    clear_compiled_cache,
+    compiled_cache_info,
+    execute,
+)
+
+N, R = 14, 500
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(42)
+    bits = rng.random((N, R)) < 0.3
+    return bits, bits.sum(0)
+
+
+@pytest.fixture()
+def idx(data):
+    bits, _ = data
+    return BitmapIndex.from_dense(jnp.asarray(bits))
+
+
+def got(idx, q, **kw):
+    return np.asarray(unpack(idx.execute(q, **kw), idx.r))
+
+
+def test_acceptance_composed_expression(idx, data):
+    """The ISSUE's acceptance query, planner-routed, vs the oracle."""
+    _, counts = data
+    expect = (counts >= 2) & (counts <= 10) & ~(counts >= 12)
+    q = And(Interval(2, 10), Not(Threshold(12)))
+    np.testing.assert_array_equal(got(idx, q), expect)
+    # operator sugar builds the same tree (and hits the same cache entry)
+    assert (Interval(2, 10) & ~Threshold(12)).key() == q.key()
+
+
+def test_every_leaf_matches_oracle(idx, data):
+    bits, counts = data
+    checks = [
+        (Threshold(4), counts >= 4),
+        (Interval(3, 7), (counts >= 3) & (counts <= 7)),
+        (Exactly(5), counts == 5),
+        (Parity(), counts % 2 == 1),
+        (Majority(), counts >= (N + 1) // 2),
+        (Sym(tuple(w % 3 == 1 for w in range(N + 1))), np.array([c % 3 == 1 for c in counts])),
+        (Col("c3"), bits[3]),
+    ]
+    for q, expect in checks:
+        np.testing.assert_array_equal(got(idx, q), expect, err_msg=repr(q))
+
+
+def test_combinators_match_oracle(idx, data):
+    bits, counts = data
+    checks = [
+        (And("c0", "c1", "c2"), bits[0] & bits[1] & bits[2]),
+        (Or("c0", "c1", "c2"), bits[0] | bits[1] | bits[2]),
+        (Not("c0"), ~bits[0]),
+        (AndNot(Threshold(3), "c0"), (counts >= 3) & ~bits[0]),
+        (Or(And("c0", "c1"), And("c2", "c3")), (bits[0] & bits[1]) | (bits[2] & bits[3])),
+    ]
+    for q, expect in checks:
+        np.testing.assert_array_equal(got(idx, q), expect, err_msg=repr(q))
+
+
+def test_weighted_matches_oracle(idx, data):
+    bits, _ = data
+    rng = np.random.default_rng(7)
+    w = rng.integers(0, 9, N)
+    wcounts = (bits * w[:, None]).sum(0)
+    for t in (1, 5, int(w.sum()) // 2, int(w.sum())):
+        q = Weighted(tuple(int(x) for x in w), t)
+        np.testing.assert_array_equal(got(idx, q), wcounts >= t, err_msg=f"t={t}")
+
+
+def test_over_subsets_and_subqueries(idx, data):
+    bits, _ = data
+    sub = bits[:5].sum(0)
+    np.testing.assert_array_equal(
+        got(idx, Threshold(2, over=tuple(f"c{i}" for i in range(5)))), sub >= 2
+    )
+    # a gate output votes inside an adder
+    votes = bits[0].astype(int) + (bits[1] & bits[2]).astype(int) + bits[3].astype(int)
+    q = Threshold(2, over=("c0", And("c1", "c2"), "c3"))
+    np.testing.assert_array_equal(got(idx, q), votes >= 2)
+
+
+def test_degenerate_thresholds(idx, data):
+    _, counts = data
+    assert got(idx, Threshold(0)).all()
+    assert not got(idx, Threshold(N + 1)).any()
+    np.testing.assert_array_equal(got(idx, Threshold(1)), counts >= 1)
+    np.testing.assert_array_equal(got(idx, Threshold(N)), counts >= N)
+
+
+def test_backend_override_fused_and_circuit(idx, data):
+    _, counts = data
+    expect = (counts >= 2) & (counts <= 10)
+    for backend in ("circuit", "fused"):
+        np.testing.assert_array_equal(
+            got(idx, Interval(2, 10), backend=backend), expect, err_msg=backend
+        )
+
+
+def test_every_backend_agrees_on_threshold(idx, data):
+    _, counts = data
+    from repro.query import THRESHOLD_BACKENDS
+
+    for backend in THRESHOLD_BACKENDS:
+        if backend == "sopckt":
+            continue  # combinatorial blow-up at N=14, T=7
+        t = {"wide_or": 1, "wide_and": N}.get(backend, 7)
+        np.testing.assert_array_equal(
+            got(idx, Threshold(t), backend=backend), counts >= t, err_msg=backend
+        )
+
+
+def test_execute_many_batches_into_one_circuit(idx, data):
+    _, counts = data
+    clear_compiled_cache()
+    qs = [Threshold(4), Interval(2, 10), Parity()]
+    res = idx.execute_many(qs)
+    np.testing.assert_array_equal(np.asarray(unpack(res[0], idx.r)), counts >= 4)
+    np.testing.assert_array_equal(
+        np.asarray(unpack(res[1], idx.r)), (counts >= 2) & (counts <= 10)
+    )
+    np.testing.assert_array_equal(np.asarray(unpack(res[2], idx.r)), counts % 2 == 1)
+    info = compiled_cache_info()
+    assert info["size"] == 1, info  # ONE multi-output compilation for 3 queries
+    idx.execute_many(qs)
+    assert compiled_cache_info()["hits"] >= 1
+
+
+def test_compiled_cache_shared_across_indexes(data):
+    bits, counts = data
+    clear_compiled_cache()
+    a = BitmapIndex.from_dense(jnp.asarray(bits))
+    b = BitmapIndex.from_dense(jnp.asarray(~bits))
+    q = And(Interval(2, 10), Not(Threshold(12)))
+    ra = a.execute(q, backend="circuit")
+    rb = b.execute(q, backend="circuit")
+    info = compiled_cache_info()
+    assert info["misses"] == 1 and info["hits"] == 1, info  # same schema, one compile
+    inv = (~bits).sum(0)
+    np.testing.assert_array_equal(
+        np.asarray(unpack(rb, R)), (inv >= 2) & (inv <= 10) & ~(inv >= 12)
+    )
+    assert not np.array_equal(np.asarray(ra), np.asarray(rb))
+
+
+def test_virtual_column_roundtrip(idx, data):
+    bits, counts = data
+    hot = idx.execute(Threshold(3))
+    idx.add_column("hot", hot)
+    assert "hot" in idx
+    np.testing.assert_array_equal(
+        got(idx, And("hot", Not("c0"))), (counts >= 3) & ~bits[0]
+    )
+    with pytest.raises(ValueError):
+        idx.add_column("hot", hot)
+
+
+def test_tail_masking_is_canonical(data):
+    bits, counts = data
+    idx = BitmapIndex.from_dense(jnp.asarray(bits))  # R=500 is not a word multiple
+    out = np.asarray(idx.execute(Not(Threshold(1))))
+    # bits past r must be zero even though NOT sets them pre-mask
+    spill = (32 - R % 32) % 32
+    assert spill > 0
+    assert int(out[-1]) >> (R % 32) == 0
+    np.testing.assert_array_equal(np.asarray(unpack(out, R)), counts == 0)
+
+
+def test_explain_and_planner_routing(idx):
+    assert idx.explain(Threshold(1)).algorithm == "wide_or"
+    assert idx.explain(Threshold(N)).algorithm == "wide_and"
+    assert idx.explain(Threshold(2)).algorithm == "looped"
+    assert idx.explain(And(Interval(2, 10), Not(Threshold(12)))).algorithm in (
+        "circuit",
+        "fused",
+    )
+    assert idx.explain(Col("c0")).algorithm == "column"
+
+
+def test_functional_execute_matches_index(data):
+    bits, counts = data
+    bm = pack(jnp.asarray(bits))
+    out = execute(bm, Interval(2, 10), r=R)
+    np.testing.assert_array_equal(
+        np.asarray(unpack(out, R)), (counts >= 2) & (counts <= 10)
+    )
+
+
+def test_errors(idx):
+    with pytest.raises(KeyError):
+        idx.execute(Col("nope"))
+    with pytest.raises(ValueError):
+        idx.execute(And(Interval(2, 3), Parity()), backend="looped")
+    with pytest.raises(ValueError):
+        Sym((True, False)).truth(5)
+    with pytest.raises(TypeError):
+        And(Interval(1, 2), 3)

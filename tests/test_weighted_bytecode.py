@@ -1,7 +1,10 @@
 """Weighted-threshold decomposition + byte-code compilation layers."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.bitmaps import pack, unpack
 from repro.core.bytecode import Interpreter, compile_circuit
