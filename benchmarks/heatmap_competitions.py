@@ -16,8 +16,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import listalgos as LA
-from repro.core.blockrle import classify_tiles, rbmrg_block_threshold
 from repro.core.threshold import threshold
+from repro.storage import TileStore, rbmrg_block_threshold
 from repro.data.paper_datasets import similarity_query, synthetic_dataset
 
 
@@ -59,7 +59,7 @@ def run():
         sel_lists = [lists[i] for i in sel]
         key = tuple(sel)
         if key not in stats_cache:
-            stats_cache[key] = classify_tiles(bm)
+            stats_cache[key] = TileStore.from_packed(bm).block_stats()
         stats = stats_cache[key]
         times = {}
         for alg in ("scancount", "ssum", "csvckt", "fused"):

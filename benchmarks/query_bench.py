@@ -1,13 +1,18 @@
-"""Query-layer benchmark: what the unified API buys.
+"""Query-layer benchmark: what the unified API + tiled storage engine buy.
 
   * composed expression compiled as ONE circuit (shared sideways-sum adder)
     vs leaf-at-a-time execution with a bitwise combine afterwards;
   * ``execute_many`` batching k independent queries into one jitted
     multi-output call vs k sequential calls;
-  * compiled-circuit cache: cold (build + optimise + jit) vs warm hit.
+  * compiled-circuit cache: cold (build + optimise + jit) vs warm hit;
+  * clean-fraction sweep: dense fused kernel vs the storage engine's
+    ``tiled_fused`` executor at clean fractions {0.0, 0.5, 0.9, 0.99} --
+    wall time AND words touched (the roofline term), written to
+    ``BENCH_query.json`` so CI tracks the perf trajectory.
 """
 from __future__ import annotations
 
+import json
 import time
 
 import jax.numpy as jnp
@@ -23,6 +28,8 @@ from repro.query import (
     clear_compiled_cache,
 )
 
+CLEAN_FRACTIONS = (0.0, 0.5, 0.9, 0.99)
+
 
 def _time(fn, reps=5):
     fn()
@@ -32,7 +39,62 @@ def _time(fn, reps=5):
     return (time.perf_counter() - t0) / reps
 
 
-def run(smoke: bool = False):
+def _clean_fraction_bits(n, n_tiles, clean_fraction, seed=0, span=64 * 32):
+    rng = np.random.default_rng(seed)
+    r = n_tiles * span
+    bits = np.zeros((n, r), bool)
+    for i in range(n):
+        for tj in range(n_tiles):
+            u = rng.random()
+            lo, hi = tj * span, (tj + 1) * span
+            if u < clean_fraction / 2:
+                pass
+            elif u < clean_fraction:
+                bits[i, lo:hi] = True
+            else:
+                bits[i, lo:hi] = rng.random(span) < 0.35
+    return bits
+
+
+def clean_fraction_sweep(smoke: bool = False) -> list:
+    """Dense fused vs tiled_fused: wall time + words touched per backend."""
+    n, n_tiles = (8, 8) if smoke else (16, 48)
+    sweep = []
+    for cf in CLEAN_FRACTIONS:
+        bits = _clean_fraction_bits(n, n_tiles, cf, seed=int(cf * 100) + 1)
+        idx = BitmapIndex.from_dense(jnp.asarray(bits))
+        q = Threshold(n // 2)
+        dense_words = idx.n * idx.n_words + idx.n_words  # N reads + 1 write
+        t_fused = _time(
+            lambda: idx.execute(q, backend="fused").block_until_ready()
+        )
+        t_tiled = _time(lambda: idx.execute(q, backend="tiled_fused"))
+        info = idx.last_info
+        tiled_words = info["dirty_words_gathered"] + idx.n_words
+        sweep.append(
+            {
+                "clean_fraction": cf,
+                "n": n,
+                "n_words": idx.n_words,
+                "backends": {
+                    "fused": {
+                        "wall_us": t_fused * 1e6,
+                        "words_touched": dense_words,
+                    },
+                    "tiled_fused": {
+                        "wall_us": t_tiled * 1e6,
+                        "words_touched": tiled_words,
+                        "case3_tiles": info["case3_tiles"],
+                        "const_tiles": info["const_tiles"],
+                        "signatures": info["signatures"],
+                    },
+                },
+            }
+        )
+    return sweep
+
+
+def run(smoke: bool = False, sweep: list | None = None):
     out = []
     rng = np.random.default_rng(0)
     n, nw = (16, 1 << 10) if smoke else (32, 1 << 14)
@@ -67,9 +129,53 @@ def run(smoke: bool = False):
     warm = time.perf_counter() - t0
     out.append(("query_compile_cold_ms", cold * 1e3, "build + optimise + jit"))
     out.append(("query_cached_warm_ms", warm * 1e3, "compiled-circuit cache hit"))
+
+    if sweep is None:
+        sweep = clean_fraction_sweep(smoke)
+    for row in sweep:
+        cf = row["clean_fraction"]
+        fused = row["backends"]["fused"]
+        tiled = row["backends"]["tiled_fused"]
+        out.append(
+            (f"query_cf{cf}_fused_words", fused["words_touched"], "dense sweep")
+        )
+        out.append(
+            (
+                f"query_cf{cf}_tiled_words",
+                tiled["words_touched"],
+                f"{tiled['case3_tiles']} case-3 tiles",
+            )
+        )
+        out.append((f"query_cf{cf}_fused_us", fused["wall_us"], ""))
+        out.append((f"query_cf{cf}_tiled_us", tiled["wall_us"], ""))
     return out
 
 
+def write_json(path: str = "BENCH_query.json", smoke: bool = False,
+               sweep: list | None = None) -> dict:
+    """Write the perf-trajectory artifact consumed by CI."""
+    payload = {
+        "bench": "query",
+        "smoke": bool(smoke),
+        "clean_fraction_sweep": sweep if sweep is not None else clean_fraction_sweep(smoke),
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    return payload
+
+
 if __name__ == "__main__":
-    for name, val, extra in run():
+    import sys
+
+    smoke = "--smoke" in sys.argv
+    sweep = clean_fraction_sweep(smoke)  # measured once, printed + persisted
+    for name, val, extra in run(smoke, sweep=sweep):
         print(f"{name},{val:.2f},{extra}")
+    write_json(smoke=smoke, sweep=sweep)
+    for row in sweep:
+        be = row["backends"]
+        print(
+            f"cf={row['clean_fraction']}: fused {be['fused']['words_touched']} words, "
+            f"tiled {be['tiled_fused']['words_touched']} words"
+        )
+    print("wrote BENCH_query.json")

@@ -15,8 +15,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import listalgos as LA
-from repro.core.blockrle import classify_tiles, rbmrg_block_threshold
 from repro.core.threshold import threshold
+from repro.storage import TileStore, rbmrg_block_threshold
 from repro.data.paper_datasets import similarity_query, synthetic_dataset
 
 DATASETS = [
@@ -44,7 +44,7 @@ def run():
         sel, rid = similarity_query(lists, N, seed=7)
         bm = jnp.asarray(packed[sel])
         sel_lists = [lists[i] for i in sel]
-        stats = classify_tiles(bm)
+        stats = TileStore.from_packed(bm).block_stats()
         times = {}
         for alg in ("scancount", "looped", "ssum", "csvckt", "fused"):
             times[alg] = _time(lambda: threshold(bm, T, alg).block_until_ready())

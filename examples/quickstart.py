@@ -16,16 +16,23 @@ from repro.query import And, BitmapIndex, Col, Interval, Not, Parity, Threshold
 N_STORES, N_PRODUCTS = 12, 10_000
 rng = np.random.default_rng(0)
 
-# each store's "on sale" set as one index column
+# each store's "on sale" set as one index column; building the index
+# tile-classifies every column (the storage engine's build-time work)
 on_sale = rng.random((N_STORES, N_PRODUCTS)) < 0.15
 idx = BitmapIndex.from_dense(
     jnp.asarray(on_sale), names=[f"store{i}" for i in range(N_STORES)]
 )
-stats = idx.stats()  # index-build-time statistics feed the planner
+stats = idx.stats()  # free: computed once when the TileStore was built
 print(f"{idx.n} stores x {idx.r} products, "
       f"cardinalities: {stats.cardinalities[:6]}...")
+print(f"tile stats: {stats.clean_fraction:.0%} clean tiles, "
+      f"{stats.dirty_words} dirty words stored")
 
-# the abstract's query: on sale in 2 to 10 stores
+# the abstract's query: on sale in 2 to 10 stores -- with the chosen plan
+# and its estimated cost (words touched) from the tile-stats cost model
+plan = idx.explain(Interval(2, 10))
+print(f"plan for Interval(2, 10)      : {plan.algorithm} "
+      f"(~{plan.cost:.0f} words touched; {plan.rationale})")
 mid = idx.execute(Interval(2, 10))
 print(f"on sale in 2..10 stores       : {idx.count(Interval(2, 10)):6d} products")
 
@@ -47,8 +54,9 @@ print(f"threshold/parity/exactly-once : "
       f"{int(unpack(hot, idx.r).sum())} / {int(unpack(odd, idx.r).sum())} / "
       f"{int(unpack(rare, idx.r).sum())}")
 
-# results are bitmaps: feed one back in as a virtual column and keep querying
-idx.add_column("hot", hot)
+# results are bitmaps: feed one back in as a virtual column and keep
+# querying (add_column returns a NEW index; the old one stays valid)
+idx = idx.add_column("hot", hot)
 promo = idx.execute(And(Col("hot"), Col("store0")))
 print(f"hot AND in store 0            : {int(unpack(promo, idx.r).sum()):6d}")
 

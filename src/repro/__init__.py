@@ -1,9 +1,11 @@
 """repro: Threshold and Symmetric Functions over Bitmaps (Kaser & Lemire,
 2014) as a production-grade multi-pod JAX/TPU framework.
 
-Subpackages: core (the paper), kernels (Pallas), models (10-arch zoo),
-train / serve / data / ckpt / ft (substrate), dist (parallelism),
-configs (arch registry), launch (mesh / dryrun / train / serve drivers).
+Subpackages: core (the paper), storage (tiled hybrid column store),
+query (expression language + BitmapIndex), kernels (Pallas), models
+(10-arch zoo), train / serve / data / ckpt / ft (substrate), dist
+(parallelism), configs (arch registry), launch (mesh / dryrun / train /
+serve drivers).
 """
 
 __version__ = "1.0.0"

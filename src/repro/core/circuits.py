@@ -101,11 +101,19 @@ class Circuit:
         return len(self.ops)
 
     # -- optimisation ----------------------------------------------------
-    def optimized(self) -> "Circuit":
-        """Constant folding + CSE + dead-code elimination (paper 4.4.5)."""
+    def optimized(self, comp_folds: bool = False) -> "Circuit":
+        """Constant folding + CSE + dead-code elimination (paper 4.4.5).
+
+        ``comp_folds`` additionally tracks complements (nodes built as
+        ``NOT x``) and folds ``x AND NOT x -> 0`` etc.  It is used by
+        :meth:`specialize` so residual tile circuits collapse to constants
+        in the RBMRG case-2 regime; it is off by default to keep the gate
+        counts of the paper's reference constructions untouched.
+        """
         new_ops: list = []
         remap: dict[int, int] = {}
         cse: dict[tuple, int] = {}
+        comp: dict[int, int] = {}  # node -> its complement (both directions)
 
         def resolve(i: int) -> int:
             if i < 0 or i < self.n_inputs:
@@ -116,6 +124,8 @@ class Circuit:
             nid = self.n_inputs + idx
             a, b = resolve(a), resolve(b)
             folded = _fold(op, a, b)
+            if folded is None and comp_folds:
+                folded = _fold_complement(op, a, b, comp)
             if folded is not None:
                 remap[nid] = folded
                 continue
@@ -131,6 +141,12 @@ class Circuit:
             out_id = self.n_inputs + len(new_ops) - 1
             remap[nid] = out_id
             cse[key] = out_id
+            if comp_folds:
+                # NOT is realised as (1 ANDNOT x) or (1 XOR x)
+                if (op == "andnot" and a == CONST1) or (op == "xor" and key_a == CONST1):
+                    other = b if op == "andnot" else key_b
+                    comp[out_id] = other
+                    comp[other] = out_id
 
         outputs = [resolve(o) for o in self.outputs]
         pruned = Circuit(self.n_inputs, new_ops, outputs)
@@ -159,6 +175,90 @@ class Circuit:
             (op, rm(a), rm(b)) for old in keep for (op, a, b) in [self.ops[old - self.n_inputs]]
         ]
         return Circuit(self.n_inputs, new_ops, [rm(o) for o in self.outputs])
+
+    # -- partial evaluation ----------------------------------------------
+    def support(self) -> list:
+        """Input ids actually reachable from the outputs (post-DCE inputs)."""
+        live = set()
+        seen = set(o for o in self.outputs if o >= self.n_inputs)
+        stack = list(seen)
+        for o in self.outputs:
+            if 0 <= o < self.n_inputs:
+                live.add(o)
+        while stack:
+            nid = stack.pop()
+            op, a, b = self.ops[nid - self.n_inputs]
+            for x in (a, b):
+                if 0 <= x < self.n_inputs:
+                    live.add(x)
+                elif x >= self.n_inputs and x not in seen:
+                    seen.add(x)
+                    stack.append(x)
+        return sorted(live)
+
+    def specialize(self, assign: dict):
+        """Partially evaluate with ``assign``: input id -> CONST0/CONST1.
+
+        Returns ``(const_outputs, residual, kept_inputs)`` where
+        ``const_outputs[j]`` is 0/1 when output j folded to a constant (else
+        None), ``residual`` is an optimised circuit over the unassigned
+        inputs computing the non-constant outputs (None if every output is
+        constant), and ``kept_inputs`` lists the original ids of the
+        residual's inputs in order.  This is the tile-skipping engine: with
+        all-zero/all-one tiles assigned as constants, constant outputs are
+        the RBMRG case-1/2 tiles and the residual circuit is the case-3
+        dirty-resolution work.
+        """
+        for i, v in assign.items():
+            if not 0 <= i < self.n_inputs or v not in (CONST0, CONST1):
+                raise ValueError(f"bad assignment {i} -> {v}")
+        kept = [i for i in range(self.n_inputs) if i not in assign]
+        imap = {old: new for new, old in enumerate(kept)}
+
+        sub = Circuit(len(kept), [], [])
+        # node-id shift: gates keep their order, ids move with n_inputs delta
+        shift = sub.n_inputs - self.n_inputs
+
+        def remap(i):
+            if i < 0:  # CONST0 / CONST1
+                return i
+            if i < self.n_inputs:
+                return assign[i] if i in assign else imap[i]
+            return i + shift
+
+        for op, a, b in self.ops:
+            sub.node(op, remap(a), remap(b))
+        sub.outputs = [remap(o) for o in self.outputs]
+        opt = sub.optimized(comp_folds=True)
+        const = [
+            (0 if o == CONST0 else 1) if o in (CONST0, CONST1) else None
+            for o in opt.outputs
+        ]
+        live = [j for j, c in enumerate(const) if c is None]
+        if not live:
+            return const, None, kept
+        residual = Circuit(opt.n_inputs, opt.ops, [opt.outputs[j] for j in live])._dce()
+        # Exact semantic constancy (folding can miss e.g. z1 OR z2 == 1 inside
+        # an adder): evaluate the whole truth table at once over bigint masks.
+        # Only for small support -- larger residuals are real case-3 work.
+        if 1 <= residual.n_inputs <= _EXACT_CONST_MAX_INPUTS:
+            outs = residual.evaluate(*_truth_table_masks(residual.n_inputs))
+            full = (1 << (1 << residual.n_inputs)) - 1
+            for j, v in zip(live, outs):
+                if v == 0:
+                    const[j] = 0
+                elif v == full:
+                    const[j] = 1
+            still = [j for j in live if const[j] is None]
+            if not still:
+                return const, None, kept
+            if len(still) != len(live):
+                pos = {j: i for i, j in enumerate(live)}
+                residual = Circuit(
+                    residual.n_inputs, residual.ops,
+                    [residual.outputs[pos[j]] for j in still],
+                )._dce()
+        return const, residual, kept
 
     # -- evaluation -------------------------------------------------------
     def evaluate(self, inputs: Sequence, zeros=None, ones=None):
@@ -226,6 +326,38 @@ def _fold(op, a, b):
             return CONST0
         if b == CONST0:
             return a
+    return None
+
+
+# specialize(): exact constancy detection is exponential in the residual
+# support, so it is capped; 2^16-bit ints are ~8 KB, still cheap per gate.
+_EXACT_CONST_MAX_INPUTS = 16
+
+
+def _truth_table_masks(d: int):
+    """(inputs, zeros, ones) for evaluating a d-input circuit over its whole
+    truth table at once: input j's mask has bit a set iff (a >> j) & 1."""
+    size = 1 << d
+    full = (1 << size) - 1
+    masks = []
+    for j in range(d):
+        half = 1 << j  # table entries per half-period
+        seg = ((1 << half) - 1) << half  # one period: half zeros, half ones
+        rep = full // ((1 << (2 * half)) - 1) if 2 * half < size else 1
+        masks.append(seg * rep)
+    return masks, 0, full
+
+
+def _fold_complement(op, a, b, comp: dict):
+    """Folds enabled by knowing b == NOT a (see Circuit.optimized)."""
+    if comp.get(a) != b:
+        return None
+    if op == "and":
+        return CONST0
+    if op in ("or", "xor"):
+        return CONST1
+    if op == "andnot":  # a & ~(~a) = a
+        return a
     return None
 
 

@@ -1,14 +1,28 @@
-"""Algorithm selection -- the paper's 5.10 decision rules as a planner.
+"""Algorithm selection -- the paper's 5.10 decision rules as a cost-model planner.
 
-Given a query (or bare (N, T)) and cheap data statistics (density,
-clean-tile fraction), choose the backend a query engine should run.  Every
-plan names a *runnable executor*: bare-threshold names resolve through
-``repro.query.executors.run_threshold_backend`` (equivalently the
-``threshold()`` shim) and circuit names through ``BitmapIndex``'s compiled
-cache.  The recommendations encode the paper's conclusions:
+Given a query (or bare (N, T)) and data statistics, choose the backend a
+query engine should run and attach an estimated cost.  Statistics come in
+two strengths:
+
+  * scalar ``density`` / ``clean_fraction`` kwargs -- the legacy
+    index-wide-mean interface, driving the paper's rule thresholds exactly
+    as published (kept for direct callers and old tests);
+  * a ``stats`` object (``repro.storage.MemberStats``, duck-typed) -- real
+    per-column tile statistics of the *member subset* of the query,
+    computed once at ``TileStore`` build time.  With it the planner runs a
+    words-touched cost model: every candidate backend gets an estimate of
+    the uint32 words it moves through the memory system, and the
+    tile-skipping backend (``tiled_fused``) is chosen when the words it
+    gathers (only dirty tiles) undercut the dense sweep.
+
+Every plan names a *runnable executor*: bare-threshold names resolve
+through ``repro.query.executors.run_threshold_backend`` and circuit names
+through ``BitmapIndex``'s compiled cache.  The recommendations encode the
+paper's conclusions:
 
   * T == 1 / T == N        -> wide OR / wide AND (paper 2.3)
-  * many clean runs        -> RBMRG (tile-level block variant here)
+  * many clean tiles       -> tiled_fused (stats-aware; the RBMRG
+                              generalisation) or rbmrg_block (scalar rule)
   * very small T           -> LOOPED
   * T close to N, sparse   -> pruning algorithms (host-side DSK)
   * otherwise              -> SSUM ('if one does not know much about the
@@ -16,24 +30,99 @@ cache.  The recommendations encode the paper's conclusions:
                                as the fused Pallas kernel on TPU, as the
                                XLA-compiled circuit elsewhere
 
-Composite expressions and non-threshold symmetric leaves always compile to
-one shared circuit ('circuit' or 'fused'), because the whole tree costs a
-single adder pass there -- leaf-at-a-time execution cannot win.
+Composite expressions and non-threshold symmetric leaves compile to one
+shared circuit ('circuit' / 'fused' / 'tiled_fused'), because the whole
+tree costs a single adder pass there -- leaf-at-a-time execution cannot win.
 """
 from __future__ import annotations
 
 import dataclasses
 
-__all__ = ["Plan", "plan_threshold", "plan_query", "CIRCUIT_BACKENDS"]
+__all__ = [
+    "Plan",
+    "plan_threshold",
+    "plan_query",
+    "estimate_words_touched",
+    "CIRCUIT_BACKENDS",
+]
 
 # Backends executed by compiling the (whole) expression into one circuit.
-CIRCUIT_BACKENDS = ("circuit", "fused")
+CIRCUIT_BACKENDS = ("circuit", "fused", "tiled_fused")
+
+# tiled execution wins when its gathered words undercut the dense sweep by
+# at least this factor (covers gather/launch overhead per signature group)
+_TILED_ADVANTAGE = 0.5
 
 
 @dataclasses.dataclass
 class Plan:
     algorithm: str
     rationale: str
+    cost: float | None = None  # estimated words touched (None: no estimate)
+    candidates: tuple = ()  # ((backend, estimated words touched), ...)
+
+
+def estimate_words_touched(
+    backend: str,
+    n: int,
+    t: int | None = None,
+    *,
+    n_words: int = 1,
+    stats=None,
+    density: float | None = None,
+) -> float | None:
+    """Estimated uint32 words moved through HBM for one execution.
+
+    The unit is words read+written per query; ``n_words = 1`` gives a
+    per-output-word figure.  ``stats`` (a ``MemberStats``-shaped object)
+    enables the data-dependent estimates; without it those return None.
+    The model is deliberately coarse -- it ranks backends, it does not
+    predict wall time.
+    """
+    nw = float(n_words)
+    t = int(t) if t is not None else max(1, n // 2)
+    dense = n * nw
+    if backend in ("wide_or", "wide_and"):
+        return dense + nw
+    if backend == "looped":
+        # T counter bitmaps updated per input: ~2NT reads+writes
+        return 2.0 * n * min(t, n) * nw
+    if backend in ("ssum", "treeadd", "srtckt", "csvckt", "circuit"):
+        # ~5N gates, every intermediate round-trips through HBM under XLA
+        return dense + 2 * 5 * dense
+    if backend in ("scancount", "scancount_streaming"):
+        # 32 counter lanes per word, read+write per chunk pass
+        return dense + 64 * nw
+    if backend == "fused":
+        return dense + nw
+    if backend == "tiled_fused":
+        if stats is None:
+            return None
+        # gathered dirty words + one output pass + per-tile bookkeeping
+        n_tiles = max(1, int(nw) // max(1, stats.tile_words))
+        return float(stats.dirty_words) + nw + n_tiles
+    if backend == "rbmrg_block":
+        if stats is None:
+            return None
+        return float(stats.dirty_words) + nw + 2 * (nw / max(1, stats.tile_words))
+    if backend == "dsk":
+        if density is None:
+            return None
+        # host position lists: ~32 positions per dense word at this density
+        return 32.0 * density * dense
+    return None
+
+
+def _candidates(n, t, *, n_words, stats, density):
+    names = ("tiled_fused", "fused", "ssum", "looped", "scancount_streaming")
+    out = []
+    for name in names:
+        est = estimate_words_touched(
+            name, n, t, n_words=n_words, stats=stats, density=density
+        )
+        if est is not None:
+            out.append((name, est))
+    return tuple(sorted(out, key=lambda kv: kv[1]))
 
 
 def plan_threshold(
@@ -44,34 +133,60 @@ def plan_threshold(
     clean_fraction: float | None = None,
     on_device: bool = True,
     fused_available: bool = True,
+    stats=None,
+    n_words: int = 1,
 ) -> Plan:
     """Pick the executor for theta(T, .) over N bitmaps."""
+    if stats is not None:
+        n_words = stats.n_words
+        if density is None:
+            density = stats.density
+    cands = _candidates(n, t, n_words=n_words, stats=stats, density=density)
+
+    def plan(alg, why):
+        cost = estimate_words_touched(
+            alg, n, t, n_words=n_words, stats=stats, density=density
+        )
+        return Plan(alg, why, cost=cost, candidates=cands)
+
     if t <= 1:
-        return Plan("wide_or", "T<=1 is a wide OR (paper 2.3)")
+        return plan("wide_or", "T<=1 is a wide OR (paper 2.3)")
     if t >= n:
-        return Plan("wide_and", "T=N is a wide AND (paper 2.3)")
-    if clean_fraction is not None and clean_fraction > 0.5:
-        return Plan(
+        return plan("wide_and", "T=N is a wide AND (paper 2.3)")
+    if stats is not None:
+        tiled = estimate_words_touched("tiled_fused", n, t, n_words=n_words, stats=stats)
+        # compare against the dense memory FLOOR (N reads + 1 write), not the
+        # XLA-roundtrip estimate: skipping must pay off even vs a perfect sweep
+        dense = estimate_words_touched("fused", n, t, n_words=n_words)
+        if tiled is not None and tiled < _TILED_ADVANTAGE * dense:
+            return plan(
+                "tiled_fused",
+                f"member columns are {stats.clean_fraction:.0%} clean tiles: "
+                f"gather ~{int(tiled)} words vs ~{int(dense)} dense "
+                "(paper 4.1 skipping, tile-classified store)",
+            )
+    elif clean_fraction is not None and clean_fraction > 0.5:
+        return plan(
             "rbmrg_block",
             f"{clean_fraction:.0%} of tiles are clean runs; run-aware merge "
             "does O(RUNCOUNT log N) work (paper 4.1, 5.10)",
         )
     if n >= 2048:
-        return Plan(
+        return plan(
             "scancount_streaming",
             "N huge: per-(N,T) circuit tabulation is infeasible; streaming "
             "counters keep an O(chunk x r) working set (paper section 6)",
         )
     if t <= 3:
-        return Plan("looped", "T very small: LOOPED is O(NT) ops and wins (paper 5.10)")
+        return plan("looped", "T very small: LOOPED is O(NT) ops and wins (paper 5.10)")
     if not on_device and density is not None and density < 1e-3 and t >= 0.9 * n:
-        return Plan(
+        return plan(
             "dsk",
             "sparse data with T~N: pruning algorithms win on the host (paper 5.8.3)",
         )
     if fused_available:
-        return Plan("fused", "default: sideways-sum adder, fused kernel (paper 5.10 + ours)")
-    return Plan("ssum", "default: sideways-sum adder circuit via XLA (paper 5.10)")
+        return plan("fused", "default: sideways-sum adder, fused kernel (paper 5.10 + ours)")
+    return plan("ssum", "default: sideways-sum adder circuit via XLA (paper 5.10)")
 
 
 def _bare_threshold_members(query):
@@ -94,13 +209,18 @@ def plan_query(
     clean_fraction: float | None = None,
     on_device: bool = True,
     fused_available: bool = True,
+    stats=None,
+    n_words: int = 1,
 ) -> Plan:
     """Pick the executor for a query expression over an N-column index."""
     from repro.query.expr import Col, Weighted, as_query
 
     q = as_query(query)
     if type(q) is Col:
-        return Plan("column", "bare column reference: fetch, no compute")
+        return Plan(
+            "column", "bare column reference: fetch, no compute",
+            cost=float(stats.n_words if stats is not None else n_words),
+        )
     members = _bare_threshold_members(q)
     if members is not None:
         return plan_threshold(
@@ -110,16 +230,35 @@ def plan_query(
             clean_fraction=clean_fraction,
             on_device=on_device,
             fused_available=fused_available,
+            stats=stats,
+            n_words=n_words,
         )
     backend = "fused" if fused_available else "circuit"
+    if stats is not None:
+        n_words = stats.n_words
+        tiled = estimate_words_touched("tiled_fused", n, None, n_words=n_words, stats=stats)
+        dense = estimate_words_touched("fused", n, None, n_words=n_words)
+        if tiled is not None and tiled < _TILED_ADVANTAGE * dense:
+            return Plan(
+                "tiled_fused",
+                f"member columns are {stats.clean_fraction:.0%} clean tiles; the "
+                "whole compiled circuit gets RBMRG case-skipping per tile "
+                "(storage engine generalisation of paper 4.1)",
+                cost=tiled,
+                candidates=_candidates(n, None, n_words=n_words, stats=stats,
+                                       density=density),
+            )
+    cost = estimate_words_touched(backend, n, None, n_words=n_words)
     if type(q) is Weighted:
         return Plan(
             backend,
             "weighted threshold: binary weight decomposition circuit "
             "(O(log max_w) adders instead of replication; beyond-paper)",
+            cost=cost,
         )
     return Plan(
         backend,
         "symmetric/composite expression: one compiled circuit, sub-queries "
         "share the sideways-sum adder via CSE (paper 4.4 + query layer)",
+        cost=cost,
     )

@@ -12,7 +12,10 @@ function is true at weight 0 the caller-visible result is masked with
 .. deprecated:: these free functions are thin shims over ``repro.query``
    (``Sym`` / ``Exactly`` / ``Interval`` / ``Parity`` / ``Majority``
    expressions executed through the compiled-circuit cache).  Prefer
-   ``BitmapIndex.execute`` -- expressions compose, share adders, and batch.
+   ``BitmapIndex.execute`` -- expressions compose, share adders, batch,
+   and (because the index is TileStore-backed) get tile skipping on
+   clean-heavy data.  The shims emit ONE consolidated DeprecationWarning
+   per process (``core.deprecation``).
 """
 from __future__ import annotations
 
@@ -20,10 +23,13 @@ from typing import Sequence
 
 import jax
 
+from .deprecation import warn_legacy_shim
+
 __all__ = ["symmetric", "exactly", "interval", "parity", "majority"]
 
 
-def _execute(bitmaps, expr, r):
+def _execute(name, bitmaps, expr, r):
+    warn_legacy_shim(name)
     from repro.query import execute
 
     return execute(bitmaps, expr, r=r)
@@ -33,28 +39,28 @@ def symmetric(bitmaps, truth: Sequence, r: int | None = None) -> jax.Array:
     """Apply the symmetric function given by ``truth[w]`` for weight w=0..N."""
     from repro.query import Sym
 
-    return _execute(bitmaps, Sym(tuple(truth)), r)
+    return _execute("core.symmetric.symmetric", bitmaps, Sym(tuple(truth)), r)
 
 
 def exactly(bitmaps, k: int, r: int | None = None):
     """The paper's 'delta' function: weight == k exactly."""
     from repro.query import Exactly
 
-    return _execute(bitmaps, Exactly(k), r)
+    return _execute("core.symmetric.exactly", bitmaps, Exactly(k), r)
 
 
 def interval(bitmaps, lo: int, hi: int, r: int | None = None):
     """Weight within [lo, hi] (e.g. 'on sale in 2 to 10 stores')."""
     from repro.query import Interval
 
-    return _execute(bitmaps, Interval(lo, hi), r)
+    return _execute("core.symmetric.interval", bitmaps, Interval(lo, hi), r)
 
 
 def parity(bitmaps, r: int | None = None):
     """Wide XOR == z0 of the sideways sum; synthesised directly."""
     from repro.query import Parity
 
-    return _execute(bitmaps, Parity(), r)
+    return _execute("core.symmetric.parity", bitmaps, Parity(), r)
 
 
 def majority(bitmaps, r: int | None = None):
@@ -65,4 +71,4 @@ def majority(bitmaps, r: int | None = None):
     """
     from repro.query import Majority
 
-    return _execute(bitmaps, Majority(), r)
+    return _execute("core.symmetric.majority", bitmaps, Majority(), r)

@@ -173,7 +173,8 @@ def _scancount_streaming(bitmaps: jax.Array, t: int, chunk: int = 128) -> jax.Ar
 # rbmrg_block / dsk names that threshold() rejected; no longer).
 ALGORITHMS = (
     "scancount", "scancount_streaming", "looped", "ssum", "treeadd", "srtckt",
-    "sopckt", "csvckt", "fused", "wide_or", "wide_and", "rbmrg_block", "dsk",
+    "sopckt", "csvckt", "fused", "tiled_fused", "wide_or", "wide_and",
+    "rbmrg_block", "dsk",
 )
 
 

@@ -97,6 +97,62 @@ def run_circuit_pallas(
     return out[0] if k == 1 else out
 
 
+# ---------------------------------------------------------------------------
+# Structural jit cache: the tiled executor runs many small *data-dependent*
+# residual circuits (one per tile-class signature), so caching by Python
+# function identity (as jax.jit does) would recompile every call.  Keying by
+# the circuit's structure lets repeated signatures -- across tiles, queries,
+# and indexes -- share one compiled kernel.
+# ---------------------------------------------------------------------------
+
+_CIRCUIT_RUNNERS: dict[tuple, object] = {}
+_CIRCUIT_RUNNERS_CAP = 1024  # residual circuits are data-dependent; bound them
+
+
+def clear_circuit_runners() -> None:
+    """Drop the structural jit cache (wired into query.clear_compiled_cache)."""
+    _CIRCUIT_RUNNERS.clear()
+
+
+def circuit_structural_key(circuit: _ckt.Circuit) -> tuple:
+    """Hashable identity of a gate DAG (used to cache compiled evaluators)."""
+    return (circuit.n_inputs, tuple(circuit.ops), tuple(circuit.outputs))
+
+
+def run_circuit_cached(
+    bitmaps: jax.Array,
+    circuit: _ckt.Circuit,
+    *,
+    block_words: int | None = None,
+    interpret: bool = False,
+    pallas: bool = True,
+) -> jax.Array:
+    """Evaluate ``circuit`` via a jitted runner cached by circuit structure.
+
+    ``pallas=True`` lowers through :func:`run_circuit_pallas` (fused VMEM
+    evaluation); otherwise the gate DAG is evaluated as straight-line jnp
+    bitwise code under one jit.  Returns uint32[n_words] (single output) or
+    uint32[k, n_words].
+    """
+    key = (circuit_structural_key(circuit), block_words, interpret, pallas)
+    fn = _CIRCUIT_RUNNERS.get(key)
+    if fn is None:
+        if len(_CIRCUIT_RUNNERS) >= _CIRCUIT_RUNNERS_CAP:
+            _CIRCUIT_RUNNERS.clear()
+        if pallas:
+            def run(bm, _c=circuit):
+                return run_circuit_pallas(
+                    bm, _c, block_words=block_words, interpret=interpret
+                )
+        else:
+            def run(bm, _c=circuit):
+                outs = _c.evaluate([bm[i] for i in range(bm.shape[0])])
+                return outs[0] if len(outs) == 1 else jnp.stack(outs)
+        fn = jax.jit(run)
+        _CIRCUIT_RUNNERS[key] = fn
+    return fn(bitmaps)
+
+
 @functools.partial(
     jax.jit, static_argnames=("t", "block_words", "interpret", "kind", "truth", "weights")
 )

@@ -13,11 +13,16 @@ the API: queries are expression trees built from symmetric-function leaves
 
 Execution is planner-driven (``core.planner``): a whole expression tree
 compiles into ONE shared Boolean circuit (sub-queries share the sideways-sum
-adder via CSE) evaluated by XLA or the fused Pallas kernel, while bare
-thresholds route to the specialised backends (wide OR/AND, LOOPED, streaming
+adder via CSE) evaluated by XLA, the fused Pallas kernel, or -- when the
+member columns' tile statistics favour skipping -- the storage engine's
+``tiled_fused`` executor (``repro.storage``), which resolves clean tiles as
+constants before launch and gathers only dirty tiles.  Bare thresholds
+route to the specialised backends (wide OR/AND, LOOPED, streaming
 scancount, block-RLE pruning, host list algorithms) the paper recommends.
-Compiled circuits and their jitted evaluators live in a per-process cache
-keyed by (query shape, N, n_words, backend).
+The index itself wraps a :class:`repro.storage.TileStore`, so statistics
+exist from the moment it is built.  Compiled circuits and their jitted
+evaluators live in a per-process cache keyed by (query shape, column
+names, backend, block size).
 """
 
 from .expr import (

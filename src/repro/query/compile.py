@@ -11,6 +11,13 @@ Sub-queries are ordinary circuit nodes, so they can feed *into* adders:
 ``Threshold(2, over=("a", And("b", "c"), Interval(1, 2)))`` counts a gate
 output as one vote.  Multi-query compilation (``execute_many``) simply adds
 more outputs to the same circuit.
+
+The compiled circuit is also what the storage engine's tiled executor
+consumes: ``repro.storage.run_tiled_circuit`` partially evaluates it per
+tile-class signature (``Circuit.specialize``), so a multi-output circuit
+means all batched queries share ONE dirty-tile gather, and ``.support()``
+(the inputs actually reachable from the outputs) bounds the signature
+space to the columns the queries really read.
 """
 from __future__ import annotations
 

@@ -7,8 +7,12 @@ planner produced ``wide_or`` / ``rbmrg_block`` / ``dsk`` names that
   * device circuit family  -- scancount, scancount_streaming, looped,
     csvckt, ssum, treeadd, srtckt, sopckt (straight-line XLA bitwise code)
   * fused                  -- the Pallas kernel (interpret mode off-TPU)
+  * tiled_fused            -- the storage engine's tile-skipping executor:
+    clean tiles resolve as constants before launch, only dirty tiles are
+    gathered into the fused kernel (repro.storage.run_tiled_circuit)
   * wide_or / wide_and     -- the T=1 / T=N degenerate reductions
-  * rbmrg_block            -- tile-level clean/dirty pruning (core.blockrle)
+  * rbmrg_block            -- tile-level clean/dirty pruning, bare
+    thresholds only (repro.storage.tiles; tiled_fused generalises it)
   * dsk                    -- DivideSkip over host position lists, for the
     paper's sparse, T~N regime where pruning beats bit-parallel work
 """
@@ -30,7 +34,7 @@ _DEVICE_ALGOS = (
 )
 
 THRESHOLD_BACKENDS = _DEVICE_ALGOS + (
-    "fused", "wide_or", "wide_and", "rbmrg_block", "dsk",
+    "fused", "tiled_fused", "wide_or", "wide_and", "rbmrg_block", "dsk",
 )
 
 
@@ -103,9 +107,17 @@ def run_threshold_backend(
             raise ValueError(f"wide_and computes theta(N, .); got T={t}, N={n}")
         return _wide_and(bitmaps)
     if backend == "rbmrg_block":
-        from repro.core.blockrle import rbmrg_block_threshold
+        from repro.storage import rbmrg_block_threshold
 
         out, _info = rbmrg_block_threshold(bitmaps, t)
+        return out
+    if backend == "tiled_fused":
+        from repro.core.circuits import build_threshold_circuit
+        from repro.storage import TileStore, run_tiled_circuit
+
+        store = TileStore.from_packed(bitmaps)
+        circ = build_threshold_circuit(n, t, "ssum")
+        out, _info = run_tiled_circuit(store, circ, block_words=block_words)
         return out
     if backend == "dsk":
         return _dsk_threshold(bitmaps, t)

@@ -1,22 +1,31 @@
-"""`BitmapIndex`: packed columns + statistics + planner-driven execution.
+"""`BitmapIndex`: a TileStore + statistics + planner-driven execution.
 
-The index owns the data (``uint32[N, n_words]``, one row per named column),
-its statistics (per-column density, clean-tile fraction, cardinality --
-index-build-time work, computed on request by :meth:`BitmapIndex.stats` and
-then consulted by the planner), and execution:
+The index wraps a :class:`repro.storage.TileStore` -- the tile-classified
+hybrid column store is the native representation; the dense
+``uint32[N, n_words]`` view is materialised (and cached) only for backends
+that need it (``store.densify()``).  Per-column cardinality / density /
+runcount / clean-fraction statistics are computed once at build time by
+the store, so the planner is *always* data-aware:
 
-  * :meth:`execute` plans a query expression (``core.planner.plan_query``)
-    and routes it -- bare thresholds to the specialised backends, everything
-    else through ONE compiled circuit;
+  * :meth:`execute` plans a query expression (``core.planner.plan_query``
+    with real member-subset tile statistics) and routes it -- clean-heavy
+    data to the tile-skipping ``tiled_fused`` executor, bare thresholds to
+    the specialised backends, everything else through ONE compiled circuit;
   * :meth:`execute_many` compiles independent circuit-family queries into a
-    single multi-output circuit evaluated in one jitted call;
+    single multi-output circuit; on the tiled path all queries share one
+    dirty-tile gather;
   * results are packed bitmaps (tail-masked to the universe size), so they
     can be fed back in as virtual columns with :meth:`add_column` -- the
     paper's "the result ... can be further processed within a bitmap index".
 
-Compiled circuits and their jitted evaluators live in a per-process cache
-keyed by (query shape, column names, backend, block size); data never enters
-the key, so every index with the same schema shares the cache.
+Indexes are immutable: :meth:`add_column` / :meth:`replace_column` return a
+NEW index sharing the untouched columns' storage, so stale references keep
+planning and executing correctly against their own schema.
+
+Compiled circuits are cached per process by (query shape, column names);
+their jitted evaluators are cached by circuit *structure* underneath
+(``kernels.threshold_ssum.run_circuit_cached``).  Data never enters either
+key, so every index with the same schema shares both layers.
 """
 from __future__ import annotations
 
@@ -28,6 +37,7 @@ import numpy as np
 
 from repro.core.bitmaps import WORD_DTYPE, cardinality, pack, tail_mask
 from repro.core.planner import CIRCUIT_BACKENDS, Plan, plan_query
+from repro.storage import TileStore, run_tiled_circuit
 
 from .compile import build_query_circuit
 from .expr import Col, Query, Threshold, as_query
@@ -42,10 +52,13 @@ __all__ = [
 ]
 
 # ---------------------------------------------------------------------------
-# Per-process compiled-circuit / jit cache
+# Per-process compiled-circuit cache.  Two layers: query shape -> Circuit
+# here, circuit structure -> jitted evaluator in kernels.threshold_ssum
+# (run_circuit_cached) -- so query shapes that compile to the same gate DAG
+# also share one compiled evaluator.
 # ---------------------------------------------------------------------------
 
-_COMPILED: dict[tuple, object] = {}
+_CIRCUITS: dict[tuple, object] = {}  # (qkeys, names) -> Circuit
 _CACHE_INFO = {"hits": 0, "misses": 0}
 
 # bare thresholds whose backend is itself a circuit join multi-query batches
@@ -54,11 +67,14 @@ _BATCHABLE = CIRCUIT_BACKENDS + ("ssum", "treeadd", "srtckt", "sopckt")
 
 def compiled_cache_info() -> dict:
     """Hits/misses/size of the per-process compiled-circuit cache."""
-    return {"size": len(_COMPILED), **_CACHE_INFO}
+    return {"size": len(_CIRCUITS), **_CACHE_INFO}
 
 
 def clear_compiled_cache() -> None:
-    _COMPILED.clear()
+    from repro.kernels.threshold_ssum import clear_circuit_runners
+
+    _CIRCUITS.clear()
+    clear_circuit_runners()
     _CACHE_INFO["hits"] = 0
     _CACHE_INFO["misses"] = 0
 
@@ -74,7 +90,7 @@ def _fused_available() -> bool:
 
 @dataclasses.dataclass(frozen=True)
 class IndexStats:
-    """Cheap per-index statistics feeding the planner's decision rules."""
+    """Per-index statistics (computed at TileStore build time, free to read)."""
 
     n: int
     n_words: int
@@ -82,8 +98,11 @@ class IndexStats:
     cardinalities: tuple
     densities: tuple
     density: float  # mean over columns
-    clean_fraction: float  # fraction of (column, tile) pairs that are runs
+    clean_fraction: float  # fraction of (column, tile) pairs that are clean
     tile_words: int
+    clean_fractions: tuple = ()  # per column
+    runcounts: tuple = ()  # per column (paper's RUNCOUNT)
+    dirty_words: int = 0  # words stored for dirty/run tiles
 
 
 # ---------------------------------------------------------------------------
@@ -94,11 +113,25 @@ class IndexStats:
 class BitmapIndex:
     """A queryable collection of named packed bitmaps over one universe."""
 
-    def __init__(self, columns, names=None, *, r: int | None = None):
-        cols = jnp.asarray(columns, WORD_DTYPE)
-        if cols.ndim != 2:
-            raise ValueError(f"expected uint32[N, n_words], got shape {cols.shape}")
-        n, n_words = cols.shape
+    def __init__(self, columns=None, names=None, *, r: int | None = None,
+                 tile_words: int = 64, _store: TileStore | None = None):
+        # classification is deferred to first `store` access: a transient
+        # index executed with an explicit backend override never pays the
+        # device_get + tile-classification pass
+        if _store is not None:
+            self._store_cache: TileStore | None = _store
+            self._pending = None
+            n, n_words, self.r = _store.n, _store.n_words, _store.r
+        else:
+            cols = jnp.asarray(columns, WORD_DTYPE)
+            if cols.ndim != 2:
+                raise ValueError(f"expected uint32[N, n_words], got shape {cols.shape}")
+            n, n_words = cols.shape
+            self._store_cache = None
+            self._pending = cols
+            self.r = int(r) if r is not None else n_words * 32
+        self._tile_words = int(tile_words)
+        self._n, self._n_words = int(n), int(n_words)
         if names is None:
             names = tuple(f"c{i}" for i in range(n))
         else:
@@ -107,34 +140,48 @@ class BitmapIndex:
                 raise ValueError(f"{len(names)} names for {n} columns")
             if len(set(names)) != n:
                 raise ValueError("duplicate column names")
-        self._columns = cols
         self._names = names
         self._slot = {name: i for i, name in enumerate(names)}
-        self.r = int(r) if r is not None else n_words * 32
         if self.r > n_words * 32 or self.r <= 0:
             raise ValueError(f"universe size {self.r} does not fit {n_words} words")
-        self._stats: IndexStats | None = None
+        self._stats_cache: dict[int, IndexStats] = {}
+        #: info dict of the last tiled execution (words gathered, case split)
+        self.last_info: dict | None = None
 
     # -- construction ------------------------------------------------------
     @classmethod
-    def from_dense(cls, bits, names=None) -> "BitmapIndex":
+    def from_dense(cls, bits, names=None, *, tile_words: int = 64) -> "BitmapIndex":
         """Build from a dense boolean/int array [N, r]."""
         bits = jnp.asarray(bits)
-        return cls(pack(bits), names, r=bits.shape[-1])
+        return cls(pack(bits), names, r=bits.shape[-1], tile_words=tile_words)
 
     @classmethod
-    def from_columns(cls, columns: dict, *, r: int | None = None) -> "BitmapIndex":
+    def from_columns(cls, columns: dict, *, r: int | None = None,
+                     tile_words: int = 64) -> "BitmapIndex":
         """Build from a {name: packed uint32[n_words]} mapping."""
         if not columns:
             raise ValueError("need at least one column")
         names = tuple(columns)
         stacked = jnp.stack([jnp.asarray(columns[k], WORD_DTYPE) for k in names])
-        return cls(stacked, names, r=r)
+        return cls(stacked, names, r=r, tile_words=tile_words)
 
     # -- basic accessors ---------------------------------------------------
     @property
+    def store(self) -> TileStore:
+        """The underlying tile-classified column store (built on demand)."""
+        if self._store_cache is None:
+            self._store_cache = TileStore.from_packed(
+                self._pending, tile_words=self._tile_words, r=self.r
+            )
+            self._pending = None
+        return self._store_cache
+
+    @property
     def columns(self) -> jax.Array:
-        return self._columns
+        """Dense uint32[N, n_words] view (materialised from tiles, cached)."""
+        if self._store_cache is None:
+            return self._pending
+        return self._store_cache.densify()
 
     @property
     def names(self) -> tuple:
@@ -142,11 +189,11 @@ class BitmapIndex:
 
     @property
     def n(self) -> int:
-        return self._columns.shape[0]
+        return self._n
 
     @property
     def n_words(self) -> int:
-        return self._columns.shape[1]
+        return self._n_words
 
     def __len__(self) -> int:
         return self.n
@@ -165,56 +212,83 @@ class BitmapIndex:
             raise KeyError(
                 f"unknown column {name!r}; index has {sorted(self._slot)[:8]}..."
             )
-        return self._columns[self._slot[name]]
+        return self.store.column(self._slot[name])
 
     def add_column(self, name: str, packed) -> "BitmapIndex":
-        """Append a (virtual) column -- e.g. a previous query result."""
+        """Return a NEW index with a (virtual) column appended -- e.g. a
+        previous query result.  Only the new column is classified; untouched
+        columns share storage with this index, which keeps working."""
         if name in self._slot:
             raise ValueError(f"column {name!r} already exists")
-        row = jnp.asarray(packed, WORD_DTYPE)
-        if row.shape != (self.n_words,):
-            raise ValueError(f"expected shape ({self.n_words},), got {row.shape}")
-        self._columns = jnp.concatenate([self._columns, row[None]], axis=0)
-        self._names = self._names + (name,)
-        self._slot[name] = len(self._names) - 1
-        self._stats = None
-        return self
+        return BitmapIndex(
+            names=self._names + (name,), _store=self.store.append(packed)
+        )
+
+    def replace_column(self, name: str, packed) -> "BitmapIndex":
+        """Return a NEW index with one column's data swapped; only that
+        column's tiles are reclassified (the slot-mask update path)."""
+        if name not in self._slot:
+            raise KeyError(f"unknown column {name!r}")
+        return BitmapIndex(
+            names=self._names, _store=self.store.replace(self._slot[name], packed)
+        )
 
     # -- statistics --------------------------------------------------------
-    def stats(self, tile_words: int = 64, refresh: bool = False) -> IndexStats:
-        """Compute (and cache) planner statistics.
+    def stats(self, tile_words: int | None = None, refresh: bool = False) -> IndexStats:
+        """Planner statistics at the requested tile granularity.
 
-        This is index-build-time work (one host pass over the data); the
-        planner only uses data-aware rules (RBMRG, DSK) after it has run.
+        Statistics at the store's native granularity are free (computed at
+        build time); other granularities reclassify once and are cached PER
+        ``tile_words`` -- ``stats(tile_words=128)`` after ``stats(tile_words=64)``
+        no longer returns stats computed at the wrong granularity.
         """
-        if self._stats is not None and not refresh:
-            return self._stats
-        from repro.core.blockrle import classify_tiles
-
-        cards = tuple(int(x) for x in np.asarray(cardinality(self._columns)))
-        dens = tuple(c / self.r for c in cards)
-        stats = classify_tiles(self._columns, tile_words=tile_words)
-        self._stats = IndexStats(
-            n=self.n,
-            n_words=self.n_words,
+        tw = int(tile_words) if tile_words is not None else self.store.tile_words
+        cached = self._stats_cache.get(tw)
+        if cached is not None and not refresh:
+            return cached
+        store = self.store.with_tile_words(tw)
+        dens = store.densities
+        st = IndexStats(
+            n=store.n,
+            n_words=store.n_words,
             r=self.r,
-            cardinalities=cards,
+            cardinalities=store.cardinalities,
             densities=dens,
             density=float(np.mean(dens)) if dens else 0.0,
-            clean_fraction=stats.clean_fraction,
-            tile_words=tile_words,
+            clean_fraction=store.clean_fraction,
+            tile_words=tw,
+            clean_fractions=tuple(s.clean_fraction for s in store.col_stats),
+            runcounts=store.runcounts,
+            dirty_words=store.dirty_words,
         )
-        return self._stats
+        self._stats_cache[tw] = st
+        return st
 
     # -- planning ----------------------------------------------------------
+    def _member_slots(self, q: Query):
+        """Column slots a bare-threshold query actually reads (None: all)."""
+        if type(q) is Threshold and q.over is not None and all(
+            type(m) is Col for m in q.over
+        ):
+            for m in q.over:
+                if m.name not in self._slot:
+                    raise KeyError(
+                        f"unknown column {m.name!r}; index has "
+                        f"{sorted(self._slot)[:8]}..."
+                    )
+            return [self._slot[m.name] for m in q.over]
+        return None
+
     def explain(self, query) -> Plan:
-        """The plan :meth:`execute` would run (stats-aware once computed)."""
-        st = self._stats
+        """The plan :meth:`execute` would run.  Plans carry ``cost`` (the
+        estimated words touched) and ``candidates`` (per-backend estimates)
+        computed from the member subset's real tile statistics."""
+        q = as_query(query)
+        stats = self.store.member_stats(self._member_slots(q))
         return plan_query(
-            as_query(query),
+            q,
             self.n,
-            density=st.density if st else None,
-            clean_fraction=st.clean_fraction if st else None,
+            stats=stats,
             fused_available=_fused_available(),
         )
 
@@ -229,7 +303,8 @@ class BitmapIndex:
     def execute_many(self, queries, *, backend: str | None = None,
                      block_words: int | None = None) -> list:
         """Evaluate independent queries; circuit-family ones are compiled
-        into a single multi-output circuit and run as ONE jitted call."""
+        into a single multi-output circuit.  On the tiled path every query
+        shares ONE dirty-tile gather; on the dense path, one jitted call."""
         qs = [as_query(q) for q in queries]
         algs = [backend or self.explain(q).algorithm for q in qs]
         batch: list[int] = []
@@ -243,9 +318,20 @@ class BitmapIndex:
                     batch.append(i)
         results: dict[int, jax.Array] = {}
         if len(batch) > 1:
-            cbackend = backend or ("fused" if _fused_available() else "circuit")
-            fn = self._compiled(tuple(qs[i] for i in batch), cbackend, block_words)
-            stacked = fn(self._columns)
+            tiled = backend == "tiled_fused" or (
+                backend is None and all(algs[i] == "tiled_fused" for i in batch)
+            )
+            if tiled:
+                circ = self._circuit_for(tuple(qs[i] for i in batch))
+                stacked, info = run_tiled_circuit(
+                    self.store, circ, block_words=block_words
+                )
+                self.last_info = info
+            else:
+                cbackend = backend or ("fused" if _fused_available() else "circuit")
+                stacked = self._dense_eval(
+                    tuple(qs[i] for i in batch), cbackend, block_words
+                )
             if stacked.ndim == 1:
                 stacked = stacked[None]
             for j, i in enumerate(batch):
@@ -267,7 +353,7 @@ class BitmapIndex:
         if type(q) is not Threshold:
             return None
         if q.over is None:
-            return self._columns, q.t
+            return self.columns, q.t
         if not all(type(m) is Col for m in q.over):
             return None
         for m in q.over:
@@ -276,51 +362,57 @@ class BitmapIndex:
                     f"unknown column {m.name!r}; index has {sorted(self._slot)[:8]}..."
                 )
         slots = [self._slot[m.name] for m in q.over]
-        return self._columns[jnp.asarray(slots)], q.t
+        return self.columns[jnp.asarray(slots)], q.t
 
     def _run(self, q: Query, alg: str, block_words) -> jax.Array:
         if alg == "column":
             return self.column(q.name)
+        if alg == "tiled_fused":
+            # the storage engine path: ANY query compiles to a circuit and
+            # gets per-tile clean/dirty skipping against the TileStore
+            out, info = run_tiled_circuit(
+                self.store, self._circuit_for((q,)), block_words=block_words
+            )
+            self.last_info = info
+            return out
         if alg in THRESHOLD_BACKENDS:
             bare = self._bare_threshold(q)
             if bare is None:
                 if alg in CIRCUIT_BACKENDS:  # "fused" doubles as both
-                    return self._compiled((q,), alg, block_words)(self._columns)
+                    return self._dense_eval((q,), alg, block_words)
                 raise ValueError(
                     f"backend {alg!r} only executes bare Threshold queries; "
-                    f"use 'circuit' or 'fused' for {type(q).__name__}"
+                    f"use 'circuit', 'fused' or 'tiled_fused' for {type(q).__name__}"
                 )
             rows, t = bare
             return run_threshold_backend(rows, t, alg, block_words=block_words)
         if alg in CIRCUIT_BACKENDS:
-            return self._compiled((q,), alg, block_words)(self._columns)
+            return self._dense_eval((q,), alg, block_words)
         raise ValueError(f"unknown backend {alg!r}")
 
-    def _compiled(self, qs: tuple, backend: str, block_words):
-        key = (tuple(q.key() for q in qs), self._names, backend, block_words)
-        fn = _COMPILED.get(key)
-        if fn is not None:
+    def _circuit_for(self, qs: tuple):
+        """The (cached) multi-output circuit compiling ``qs`` over this schema."""
+        key = (tuple(q.key() for q in qs), self._names)
+        circ = _CIRCUITS.get(key)
+        if circ is not None:
             _CACHE_INFO["hits"] += 1
-            return fn
+            return circ
         _CACHE_INFO["misses"] += 1
         circ = build_query_circuit(qs, self.n, self._names)
-        if backend == "fused":
-            from repro.kernels.threshold_ssum import INTERPRET, run_circuit_pallas
+        _CIRCUITS[key] = circ
+        return circ
 
-            def run(bm, _c=circ):
-                return run_circuit_pallas(
-                    bm, _c, block_words=block_words, interpret=INTERPRET
-                )
+    def _dense_eval(self, qs: tuple, backend: str, block_words) -> jax.Array:
+        """Compile ``qs`` and evaluate over the dense column view."""
+        from repro.kernels.threshold_ssum import INTERPRET, run_circuit_cached
 
-        else:
-
-            def run(bm, _c=circ):
-                outs = _c.evaluate([bm[i] for i in range(bm.shape[0])])
-                return outs[0] if len(outs) == 1 else jnp.stack(outs)
-
-        fn = jax.jit(run)
-        _COMPILED[key] = fn
-        return fn
+        return run_circuit_cached(
+            self.columns,
+            self._circuit_for(qs),
+            block_words=block_words,
+            interpret=INTERPRET,
+            pallas=backend == "fused",
+        )
 
     def _mask(self, out: jax.Array) -> jax.Array:
         if self.r >= self.n_words * 32:
@@ -337,10 +429,11 @@ def execute(bitmaps, query, *, r: int | None = None, backend: str | None = None,
             block_words: int | None = None) -> jax.Array:
     """One-shot functional form: execute ``query`` over packed bitmaps.
 
-    Builds a transient default-named :class:`BitmapIndex`; the compiled
-    cache is keyed by schema, so repeated calls with the same shape reuse
-    compilations.  Kept as the substrate for the legacy free-function shims
-    (``core.threshold.threshold`` etc.).
+    Builds a transient default-named :class:`BitmapIndex` (so the data gets
+    tile-classified and the planner routes clean-heavy inputs through the
+    tiled path); the compiled cache is keyed by schema, so repeated calls
+    with the same shape reuse compilations.  Kept as the substrate for the
+    legacy free-function shims (``core.threshold.threshold`` etc.).
     """
     idx = BitmapIndex(bitmaps, r=r)
     return idx.execute(query, backend=backend, block_words=block_words)

@@ -50,6 +50,7 @@ class ServeEngine:
         self.step_count = 0
         self._slot_version = 0  # bumped whenever slot occupancy/positions move
         self._slot_cache: dict = {}
+        self._slot_base: "BitmapIndex | None" = None  # reused across versions
 
     # -- slot bitmap index -----------------------------------------------
     def slot_bitmap(self, predicate: Callable[[Request | None], bool]):
@@ -77,13 +78,22 @@ class ServeEngine:
             occ.append(i)
             if self.pos[i] >= self.max_seq - near_limit_margin:
                 near.append(i)
-        idx = BitmapIndex.from_columns(
-            {
-                "occupied": from_positions(occ, self.slots),
-                "near_limit": from_positions(near, self.slots),
-            },
-            r=self.slots,
-        )
+        occ_bm = from_positions(occ, self.slots)
+        near_bm = from_positions(near, self.slots)
+        idx = self._slot_base
+        if idx is None:
+            idx = BitmapIndex.from_columns(
+                {"occupied": occ_bm, "near_limit": near_bm}, r=self.slots
+            )
+        else:
+            # indexes are immutable TileStore wrappers: swap only the masks
+            # that actually moved, so a version bump that e.g. flips one
+            # occupancy bit reclassifies one column and leaves the other's
+            # tiles (and the shared dirty storage) untouched
+            for name, bm in (("occupied", occ_bm), ("near_limit", near_bm)):
+                if not np.array_equal(np.asarray(idx.column(name)), np.asarray(bm)):
+                    idx = idx.replace_column(name, bm)
+        self._slot_base = idx
         self._slot_cache = {key: idx}
         return idx
 

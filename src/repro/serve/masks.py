@@ -5,9 +5,9 @@ the conjunction/threshold of several *criteria bitmaps* over KV positions
 (causal validity, sliding window, same-document, not-padding, retrieval
 votes...).  Masks are packed uint32 rows (32 KV positions/word), composed
 with `core.threshold` / logical ops, and classified into clean/dirty tiles
-with `core.blockrle` -- all-zero tiles are skipped entirely by a
-block-sparse attention consumer (the skip decision is made host/launch
-side, the paper's EWAH fast-forward insight).
+by the storage engine (`repro.storage.TileStore`) -- all-zero tiles are
+skipped entirely by a block-sparse attention consumer (the skip decision
+is made host/launch side, the paper's EWAH fast-forward insight).
 
 `head_vote_mask` is the threshold showcase: K heads (or retrieval scorers)
 each nominate KV pages they consider important; a page is kept if >= T of
@@ -20,8 +20,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bitmaps import n_words_for, pack, unpack
-from repro.core.blockrle import classify_tiles
 from repro.core.threshold import threshold
+from repro.storage import TILE_ZERO, TileStore
 
 __all__ = [
     "causal_mask_bitmap",
@@ -67,12 +67,14 @@ def kv_tile_skiplist(mask_words: jax.Array, n_kv: int, tile_positions: int = 204
     list for a block-sparse attention kernel; all-zero tiles are never read.
     """
     tile_words = max(1, tile_positions // 32)
-    stats = classify_tiles(mask_words[None, :], tile_words=tile_words)
-    classes = stats.classes[0]
-    keep = np.nonzero(classes != 0)[0]
+    store = TileStore.from_packed(
+        jnp.asarray(mask_words)[None, :], tile_words=tile_words
+    )
+    classes = store.classes_word[0]  # zero/one/dirty is all the skiplist needs
+    keep = np.nonzero(classes != TILE_ZERO)[0]
     info = {
         "n_tiles": int(classes.size),
-        "skipped_tiles": int((classes == 0).sum()),
-        "skip_fraction": float((classes == 0).mean()),
+        "skipped_tiles": int((classes == TILE_ZERO).sum()),
+        "skip_fraction": float((classes == TILE_ZERO).mean()),
     }
     return keep, info

@@ -1,0 +1,146 @@
+"""Tile classification primitives: the TPU-native adaptation of EWAH + RBMRG.
+
+Word-granular RLE (EWAH marker words, iterator skipping) is data-dependent
+pointer chasing -- hostile to a vector machine.  We keep the *insight*
+(clean runs are processed in O(1), only dirty words do bit work) at tile
+granularity:
+
+  * a bitmap is split into tiles of ``tile_words`` uint32 words;
+  * each tile is classified all-zero / all-one / dirty (and, in
+    :class:`~repro.storage.TileStore`, single-transition *run* tiles are
+    additionally tagged);
+  * for a threshold query, per tile we know k = #all-one inputs and
+    d = #dirty inputs, giving the paper's RBMRG 3-case split:
+      1. T - k <= 0        -> output tile is all ones      (no bit work)
+      2. T - k >  d        -> output tile is all zeros     (no bit work)
+      3. otherwise          -> a (T-k)-threshold over the d dirty tiles
+
+Case-3 tiles are gathered host-side into a dense batch and dispatched to
+the compute backend -- the skipping decision is made *before* launch
+instead of inside a serial scan, which is the TPU-legal way to realise
+EWAH's fast-forwarding.
+
+This module is the single home of tile classification (it moved here from
+``core/blockrle.py``; that module is now a deprecated re-export shim).
+:func:`rbmrg_block_threshold` is the original bare-threshold pruner; the
+generalisation to arbitrary compiled circuits is
+:func:`repro.storage.tiled.run_tiled_circuit`.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+# NOTE: no repro.core imports at module level -- core/__init__ re-exports the
+# blockrle shim, which imports this module; keeping tiles.py dependency-free
+# lets `import repro.storage` work from either direction of that edge.
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["BlockStats", "classify_tiles", "rbmrg_block_threshold", "runcount"]
+
+
+@dataclasses.dataclass
+class BlockStats:
+    """Per-(bitmap, tile) classification. 0 = all-zero, 1 = all-one, 2 = dirty."""
+
+    classes: np.ndarray  # uint8 [N, n_tiles]
+    tile_words: int
+    n_words: int
+
+    @property
+    def clean_fraction(self) -> float:
+        return float((self.classes != 2).mean())
+
+
+def classify_tiles(bitmaps, tile_words: int = 64) -> BlockStats:
+    """Host-side tile classification (this is 'index build time' work)."""
+    arr = np.asarray(jax.device_get(bitmaps), dtype=np.uint32)
+    n, nw = arr.shape
+    n_tiles = (nw + tile_words - 1) // tile_words
+    pad = n_tiles * tile_words - nw
+    if pad:
+        arr = np.pad(arr, ((0, 0), (0, pad)))
+    tiles = arr.reshape(n, n_tiles, tile_words)
+    all_zero = (tiles == 0).all(axis=2)
+    all_one = (tiles == 0xFFFFFFFF).all(axis=2)
+    classes = np.full((n, n_tiles), 2, dtype=np.uint8)
+    classes[all_zero] = 0
+    classes[all_one] = 1
+    return BlockStats(classes=classes, tile_words=tile_words, n_words=nw)
+
+
+def runcount(bitmaps) -> int:
+    """Paper's RUNCOUNT: total number of 0/1 runs across the collection."""
+    arr = np.asarray(jax.device_get(bitmaps), dtype=np.uint32)
+    bits = np.unpackbits(arr.view(np.uint8).reshape(arr.shape[0], -1), axis=1, bitorder="little")
+    flips = (bits[:, 1:] != bits[:, :-1]).sum(axis=1) + 1
+    return int(flips.sum())
+
+
+def rbmrg_block_threshold(
+    bitmaps, t: int, stats: BlockStats | None = None, tile_words: int = 64, algorithm: str = "ssum"
+):
+    """Threshold with RBMRG-style clean/dirty pruning at tile granularity.
+
+    Returns (packed result uint32[n_words], info dict).  ``info`` reports how
+    much bit-level work the pruning skipped -- the paper's Table 4 claim that
+    run-aware merging does O(RUNCOUNT log N) instead of O(rN/W) work.
+
+    This is the bare-threshold specialisation; arbitrary compiled circuits
+    (Interval/Exactly/And/Or trees) get the same skipping through
+    :func:`repro.storage.tiled.run_tiled_circuit`.
+    """
+    from repro.core.threshold import threshold as _threshold
+
+    arr = np.asarray(jax.device_get(bitmaps), dtype=np.uint32)
+    n, nw = arr.shape
+    if stats is None:
+        stats = classify_tiles(arr, tile_words)
+    tw = stats.tile_words
+    n_tiles = stats.classes.shape[1]
+    k = (stats.classes == 1).sum(axis=0)  # all-one inputs per tile
+    d = (stats.classes == 2).sum(axis=0)  # dirty inputs per tile
+
+    out = np.zeros(n_tiles * tw, dtype=np.uint32)
+    case1 = (t - k) <= 0
+    case2 = (t - k) > d
+    case3 = ~(case1 | case2)
+    out_tiles = out.reshape(n_tiles, tw)
+    out_tiles[case1] = 0xFFFFFFFF
+
+    idx3 = np.nonzero(case3)[0]
+    dirty_words_processed = 0
+    if idx3.size:
+        padded = np.pad(arr, ((0, 0), (0, n_tiles * tw - nw))).reshape(n, n_tiles, tw)
+        # Bucket case-3 tiles by (#dirty, residual threshold) so each bucket is
+        # one fixed-shape kernel launch (shape bucketing = our recompile-free
+        # analogue of EWAH's per-run dispatch).
+        buckets: dict[tuple[int, int], list[int]] = {}
+        for ti in idx3:
+            buckets.setdefault((int(d[ti]), int(t - k[ti])), []).append(int(ti))
+        for (nd, tt), tis in buckets.items():
+            gathered = np.empty((len(tis), nd, tw), dtype=np.uint32)
+            for row, ti in enumerate(tis):
+                sel = np.nonzero(stats.classes[:, ti] == 2)[0]
+                gathered[row] = padded[sel, ti, :]
+            dirty_words_processed += gathered.size
+            if tt == 1:
+                res = np.bitwise_or.reduce(gathered, axis=1)
+            elif tt == nd:
+                res = np.bitwise_and.reduce(gathered, axis=1)
+            else:
+                batched = jax.vmap(lambda g: _threshold(g, tt, algorithm))(jnp.asarray(gathered))
+                res = np.asarray(jax.device_get(batched))
+            for row, ti in enumerate(tis):
+                out_tiles[ti] = res[row]
+    info = {
+        "n_tiles": n_tiles,
+        "case1_tiles": int(case1.sum()),
+        "case2_tiles": int(case2.sum()),
+        "case3_tiles": int(case3.sum()),
+        "dirty_words_processed": int(dirty_words_processed),
+        "total_words": int(n * nw),
+        "work_fraction": float(dirty_words_processed) / max(1, n * nw),
+    }
+    return jnp.asarray(out[:nw]), info

@@ -1,0 +1,356 @@
+"""`TileStore`: the hybrid tile-classified column store.
+
+The single source of truth for column data in the query engine.  Each
+column (a packed bitmap over the universe ``r``) is split into tiles of
+``tile_words`` uint32 words and classified at build time:
+
+  * ``TILE_ZERO`` (0)  -- every word 0
+  * ``TILE_ONE``  (1)  -- every word 0xFFFFFFFF
+  * ``TILE_DIRTY`` (2) -- anything else
+  * ``TILE_RUN``  (3)  -- dirty, but a single 0/1 transition inside the
+    tile (one run boundary).  Run tiles still carry their words in the
+    dirty array (they need bit work when combined), but the tag feeds the
+    planner's RUNCOUNT-style cost estimates.
+
+Only dirty/run tiles store data: their words are packed contiguously in
+ONE device array (``dirty``) with an offsets table (``dirty_index``)
+mapping (column, tile) to a row of that array, so a tiled executor gathers
+exactly the words it needs and clean tiles cost zero HBM traffic.
+Per-column cardinality / density / runcount / clean-fraction statistics
+are computed once here -- this is the paper's "index build time" work that
+makes the planner data-aware without any per-query scanning.
+
+Stores are immutable: ``append`` / ``replace`` return a new ``TileStore``
+that shares nothing mutable with the old one, so stale references keep
+working (the property ``BitmapIndex.add_column`` relies on).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bitmaps import WORD_DTYPE, n_words_for, pack
+
+from .tiles import BlockStats
+
+__all__ = [
+    "TILE_ZERO",
+    "TILE_ONE",
+    "TILE_DIRTY",
+    "TILE_RUN",
+    "ColumnStats",
+    "MemberStats",
+    "TileStore",
+]
+
+TILE_ZERO, TILE_ONE, TILE_DIRTY, TILE_RUN = 0, 1, 2, 3
+
+if hasattr(np, "bitwise_count"):  # numpy >= 2.0
+    def _popcount_words(row: np.ndarray) -> int:
+        return int(np.bitwise_count(row).sum())
+else:  # byte-table fallback for numpy 1.x
+    _POP8 = np.array([bin(i).count("1") for i in range(256)], np.uint16)
+
+    def _popcount_words(row: np.ndarray) -> int:
+        return int(_POP8[row.view(np.uint8)].sum())
+
+
+@dataclasses.dataclass(frozen=True)
+class ColumnStats:
+    """Build-time statistics of one column."""
+
+    cardinality: int
+    density: float
+    runcount: int
+    n_dirty_tiles: int  # DIRTY + RUN
+    clean_fraction: float  # fraction of tiles that are ZERO/ONE
+
+
+@dataclasses.dataclass(frozen=True)
+class MemberStats:
+    """Aggregate statistics of a member subset, consumed by the planner."""
+
+    n: int
+    n_words: int
+    tile_words: int
+    clean_fraction: float  # over (member, tile) pairs
+    density: float  # mean member density
+    dirty_words: int  # total words stored for the members' dirty tiles
+    case3_tiles: int  # tiles where at least one member is dirty
+
+
+@dataclasses.dataclass(frozen=True)
+class _Column:
+    """One classified column: per-tile word-level classes + dirty words.
+
+    Word-level classification (all-zero / all-one / dirty) is all that
+    execution and planning need and costs one vectorised comparison pass.
+    The bit-level metadata (exact runcount, RUN tagging) needs an 8x
+    ``unpackbits`` expansion, so the store computes it lazily on first
+    access of ``classes`` / ``col_stats`` -- transient indexes built per
+    query (the legacy shims) never pay for it.
+    """
+
+    classes: np.ndarray  # uint8 [n_tiles], word-level: ZERO/ONE/DIRTY only
+    dirty: np.ndarray  # uint32 [n_dirty, tile_words], in tile order
+    cardinality: int
+
+
+def _classify_column(row: np.ndarray, tile_words: int) -> _Column:
+    """Word-level classification of one padded column (uint32[n_tiles * tw])."""
+    n_tiles = row.size // tile_words
+    tiles = row.reshape(n_tiles, tile_words)
+    all_zero = (tiles == 0).all(axis=1)
+    all_one = (tiles == 0xFFFFFFFF).all(axis=1)
+    classes = np.full(n_tiles, TILE_DIRTY, dtype=np.uint8)
+    classes[all_zero] = TILE_ZERO
+    classes[all_one] = TILE_ONE
+    dirty = tiles[classes == TILE_DIRTY]
+    return _Column(
+        classes=classes,
+        dirty=np.ascontiguousarray(dirty),
+        cardinality=_popcount_words(row),
+    )
+
+
+def _bit_stats(row: np.ndarray, classes: np.ndarray, tile_words: int, r: int):
+    """Bit-level pass over one padded column: (runcount, run_mask)."""
+    n_tiles = classes.size
+    bits = np.unpackbits(row.view(np.uint8), bitorder="little")
+    flips = bits[1:] != bits[:-1]
+    rc = int(flips[: max(r - 1, 0)].sum()) + 1
+    # transitions strictly inside each tile: positions [j*S, (j+1)*S - 2]
+    span = tile_words * 32
+    inner = np.concatenate([flips, [False]]).reshape(n_tiles, span)
+    inner_counts = inner[:, : span - 1].sum(axis=1)
+    run_mask = (classes >= TILE_DIRTY) & (inner_counts == 1)
+    return rc, run_mask
+
+
+class TileStore:
+    """Tile-classified columns: classes + one packed dirty-tile array."""
+
+    def __init__(self, columns: list, *, tile_words: int, n_words: int, r: int,
+                 dense=None):
+        self._cols: tuple = tuple(columns)
+        self.tile_words = int(tile_words)
+        self.n_words = int(n_words)
+        self.r = int(r)
+        self.n_tiles = (self.n_words + self.tile_words - 1) // self.tile_words
+        # word-level classes [N, n_tiles]; dirty packing is assembled lazily
+        # so append/replace stay O(changed column), not O(total dirty words)
+        self._classes_word = (
+            np.stack([c.classes for c in self._cols])
+            if self._cols
+            else np.zeros((0, self.n_tiles), np.uint8)
+        )
+        self._dirty_np_cache: np.ndarray | None = None
+        self._dirty_index_cache: np.ndarray | None = None
+        self._dirty_dev = None
+        self._dense = dense  # optional cached jnp uint32[N, n_words]
+        # bit-level metadata (RUN tags, runcounts): computed on first access
+        self._refined_classes: np.ndarray | None = None
+        self._col_stats: tuple | None = None
+
+    def _assemble_dirty(self) -> None:
+        if self._dirty_np_cache is not None:
+            return
+        counts = [c.dirty.shape[0] for c in self._cols]
+        offsets = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
+        index = np.full((len(self._cols), self.n_tiles), -1, np.int64)
+        for i, c in enumerate(self._cols):
+            index[i, c.classes >= TILE_DIRTY] = offsets[i] + np.arange(counts[i])
+        self._dirty_index_cache = index
+        self._dirty_np_cache = (
+            np.concatenate([c.dirty for c in self._cols])
+            if any(counts)
+            else np.zeros((0, self.tile_words), np.uint32)
+        )
+
+    @property
+    def dirty_index(self) -> np.ndarray:
+        """int64[N, n_tiles]: row of ``dirty`` per (column, tile), -1 clean."""
+        self._assemble_dirty()
+        return self._dirty_index_cache
+
+    @property
+    def _dirty_np(self) -> np.ndarray:
+        self._assemble_dirty()
+        return self._dirty_np_cache
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def from_packed(cls, columns, *, tile_words: int = 64, r: int | None = None
+                    ) -> "TileStore":
+        """Build from packed bitmaps uint32[N, n_words] (device or host)."""
+        dev = jnp.asarray(columns, WORD_DTYPE)
+        arr = np.asarray(jax.device_get(dev), dtype=np.uint32)
+        if arr.ndim != 2:
+            raise ValueError(f"expected uint32[N, n_words], got shape {arr.shape}")
+        n, nw = arr.shape
+        r = int(r) if r is not None else nw * 32
+        n_tiles = (nw + tile_words - 1) // tile_words
+        padded = np.pad(arr, ((0, 0), (0, n_tiles * tile_words - nw)))
+        cols = [_classify_column(padded[i], tile_words) for i in range(n)]
+        return cls(cols, tile_words=tile_words, n_words=nw, r=r, dense=dev)
+
+    @classmethod
+    def from_dense(cls, bits, *, tile_words: int = 64) -> "TileStore":
+        """Build from a dense boolean/int array [N, r]."""
+        bits = jnp.asarray(bits)
+        return cls.from_packed(pack(bits), tile_words=tile_words, r=bits.shape[-1])
+
+    def _classify_row(self, packed_row) -> _Column:
+        row = np.asarray(jax.device_get(jnp.asarray(packed_row, WORD_DTYPE)),
+                         dtype=np.uint32)
+        if row.shape != (self.n_words,):
+            raise ValueError(f"expected shape ({self.n_words},), got {row.shape}")
+        padded = np.pad(row, (0, self.n_tiles * self.tile_words - self.n_words))
+        return _classify_column(padded, self.tile_words)
+
+    def append(self, packed_row) -> "TileStore":
+        """New store with one more column; only the new column is classified."""
+        col = self._classify_row(packed_row)
+        dense = None
+        if self._dense is not None:
+            dense = jnp.concatenate(
+                [self._dense, jnp.asarray(packed_row, WORD_DTYPE)[None]], axis=0
+            )
+        return TileStore(list(self._cols) + [col], tile_words=self.tile_words,
+                         n_words=self.n_words, r=self.r, dense=dense)
+
+    def replace(self, i: int, packed_row) -> "TileStore":
+        """New store with column ``i`` swapped; only its tiles are reclassified
+        (the slot-mask update path: untouched columns keep their dirty rows)."""
+        col = self._classify_row(packed_row)
+        cols = list(self._cols)
+        cols[int(i)] = col
+        dense = None
+        if self._dense is not None:
+            dense = self._dense.at[int(i)].set(jnp.asarray(packed_row, WORD_DTYPE))
+        return TileStore(cols, tile_words=self.tile_words, n_words=self.n_words,
+                         r=self.r, dense=dense)
+
+    def with_tile_words(self, tile_words: int) -> "TileStore":
+        """Reclassify the whole store at a different tile granularity."""
+        if tile_words == self.tile_words:
+            return self
+        return TileStore.from_packed(self.densify(), tile_words=tile_words, r=self.r)
+
+    # -- accessors ---------------------------------------------------------
+    @property
+    def n(self) -> int:
+        return len(self._cols)
+
+    @property
+    def dirty(self) -> jax.Array:
+        """The packed dirty-tile words, uint32[total_dirty, tile_words]."""
+        if self._dirty_dev is None:
+            self._dirty_dev = jnp.asarray(self._dirty_np)
+        return self._dirty_dev
+
+    @property
+    def classes_word(self) -> np.ndarray:
+        """Word-level classes (ZERO/ONE/DIRTY) -- all execution needs."""
+        return self._classes_word
+
+    @property
+    def classes(self) -> np.ndarray:
+        """Full classes incl. RUN tags (triggers the lazy bit-level pass)."""
+        self._bit_refine()
+        return self._refined_classes
+
+    @property
+    def col_stats(self) -> tuple:
+        """Per-column :class:`ColumnStats` (triggers the lazy bit pass)."""
+        self._bit_refine()
+        return self._col_stats
+
+    def _bit_refine(self) -> None:
+        if self._col_stats is not None:
+            return
+        padded = self._padded_host()
+        refined = self._classes_word.copy()
+        stats = []
+        for i, c in enumerate(self._cols):
+            rc, run_mask = _bit_stats(
+                padded[i], self._classes_word[i], self.tile_words, self.r
+            )
+            refined[i][run_mask] = TILE_RUN
+            n_dirty = int((self._classes_word[i] >= TILE_DIRTY).sum())
+            stats.append(
+                ColumnStats(
+                    cardinality=c.cardinality,
+                    density=c.cardinality / max(self.r, 1),
+                    runcount=rc,
+                    n_dirty_tiles=n_dirty,
+                    clean_fraction=1.0 - n_dirty / max(self.n_tiles, 1),
+                )
+            )
+        self._refined_classes = refined
+        self._col_stats = tuple(stats)
+
+    def _padded_host(self) -> np.ndarray:
+        """Host uint32[N, n_tiles * tile_words] reconstructed from tiles."""
+        out = np.zeros((self.n, self.n_tiles, self.tile_words), np.uint32)
+        out[self._classes_word == TILE_ONE] = 0xFFFFFFFF
+        out[self._classes_word >= TILE_DIRTY] = self._dirty_np
+        return out.reshape(self.n, -1)
+
+    @property
+    def cardinalities(self) -> tuple:
+        return tuple(c.cardinality for c in self._cols)
+
+    @property
+    def densities(self) -> tuple:
+        return tuple(c.cardinality / max(self.r, 1) for c in self._cols)
+
+    @property
+    def runcounts(self) -> tuple:
+        return tuple(s.runcount for s in self.col_stats)
+
+    @property
+    def clean_fraction(self) -> float:
+        """Fraction of (column, tile) pairs that are all-zero/all-one."""
+        if self._classes_word.size == 0:
+            return 1.0
+        return float((self._classes_word <= TILE_ONE).mean())
+
+    @property
+    def dirty_words(self) -> int:
+        return int((self._classes_word >= TILE_DIRTY).sum()) * self.tile_words
+
+    def densify(self) -> jax.Array:
+        """Dense uint32[N, n_words] view (cached) for dense-path backends."""
+        if self._dense is None:
+            self._dense = jnp.asarray(self._padded_host()[:, : self.n_words])
+        return self._dense
+
+    def column(self, i: int) -> jax.Array:
+        return self.densify()[int(i)]
+
+    def block_stats(self) -> BlockStats:
+        """Legacy 3-class view (ZERO/ONE/DIRTY) for ``rbmrg_block``."""
+        return BlockStats(classes=self._classes_word.copy(),
+                          tile_words=self.tile_words, n_words=self.n_words)
+
+    def member_stats(self, slots=None) -> MemberStats:
+        """Planner-facing aggregate over a member subset (default: all)."""
+        idx = np.arange(self.n) if slots is None else np.asarray(list(slots))
+        if idx.size == 0:
+            return MemberStats(0, self.n_words, self.tile_words, 1.0, 0.0, 0, 0)
+        cls = self._classes_word[idx]
+        dirty_tiles = int((cls >= TILE_DIRTY).sum())
+        dens = [self._cols[i].cardinality / max(self.r, 1) for i in idx]
+        return MemberStats(
+            n=int(idx.size),
+            n_words=self.n_words,
+            tile_words=self.tile_words,
+            clean_fraction=1.0 - dirty_tiles / max(cls.size, 1),
+            density=float(np.mean(dens)),
+            dirty_words=dirty_tiles * self.tile_words,
+            case3_tiles=int(((cls >= TILE_DIRTY).any(axis=0)).sum()),
+        )

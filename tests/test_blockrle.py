@@ -1,10 +1,15 @@
-"""Block-RLE (EWAH/RBMRG adaptation): pruning correctness + work accounting."""
+"""Block-RLE (EWAH/RBMRG adaptation): pruning correctness + work accounting.
+
+The primitives live in ``repro.storage`` (tile classification is owned by
+the storage engine); ``repro.core.blockrle`` remains as a re-export shim,
+whose compatibility is covered by test_legacy_blockrle_shim below.
+"""
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.blockrle import classify_tiles, rbmrg_block_threshold, runcount
 from repro.core.bitmaps import pack, unpack
 from repro.core.threshold import threshold
+from repro.storage import classify_tiles, rbmrg_block_threshold, runcount
 
 
 def _clustered(n, r, seed=0, lo=8000, hi=40000):
@@ -62,6 +67,90 @@ def test_classify_tiles_and_runcount():
     # RUNCOUNT: bitmap0 has 2 runs, bitmap1 has 1
     assert runcount(bm) == 3
     assert stats.clean_fraction == 1.0
+
+
+def _oracle(bm, t, r):
+    return np.asarray(unpack(threshold(bm, t, "scancount"), r))
+
+
+def test_case1_all_one_short_circuit():
+    """Tiles with T - k <= 0 resolve to all-ones with zero dirty work."""
+    nw = 64 * 3
+    r = nw * 32
+    bm = jnp.concatenate(
+        [
+            jnp.full((4, nw), 0xFFFFFFFF, jnp.uint32),  # k = 4 everywhere
+            jnp.asarray(
+                np.random.default_rng(0).integers(0, 2**32, (2, nw), dtype=np.uint32)
+            ),
+        ]
+    )
+    out, info = rbmrg_block_threshold(bm, 3, tile_words=64)  # T=3 <= k
+    assert info["case1_tiles"] == info["n_tiles"]
+    assert info["dirty_words_processed"] == 0
+    np.testing.assert_array_equal(np.asarray(unpack(out, r)), _oracle(bm, 3, r))
+    assert np.asarray(unpack(out, r)).all()
+
+
+def test_case2_all_zero_short_circuit():
+    """Tiles with T - k > d resolve to all-zeros with zero dirty work."""
+    nw = 64 * 2
+    r = nw * 32
+    bm = jnp.concatenate(
+        [
+            jnp.zeros((5, nw), jnp.uint32),
+            jnp.asarray(
+                np.random.default_rng(1).integers(0, 2**32, (2, nw), dtype=np.uint32)
+            ),
+        ]
+    )
+    out, info = rbmrg_block_threshold(bm, 3, tile_words=64)  # d=2 < T-k=3
+    assert info["case2_tiles"] == info["n_tiles"]
+    assert info["dirty_words_processed"] == 0
+    np.testing.assert_array_equal(np.asarray(unpack(out, r)), _oracle(bm, 3, r))
+    assert not np.asarray(unpack(out, r)).any()
+
+
+def test_partial_final_tile():
+    """n_words not a tile multiple: the padded final tile stays correct."""
+    nw = 64 * 2 + 17  # r % (32 * tile_words) != 0
+    r = nw * 32 - 5  # and r not a word multiple either
+    bits = _clustered(7, r, seed=9, lo=300, hi=4000)
+    bm = pack(jnp.asarray(bits))
+    assert bm.shape[1] == nw
+    for t in (1, 3, 7):
+        out, info = rbmrg_block_threshold(bm, t, tile_words=64)
+        np.testing.assert_array_equal(
+            np.asarray(unpack(out, r)), _oracle(bm, t, r), err_msg=f"t={t}"
+        )
+    stats = classify_tiles(bm, tile_words=64)
+    assert stats.classes.shape[1] == 3  # ceil(145 / 64)
+
+
+def test_runcount_alternating_and_degenerate():
+    r = 64 * 32
+    alternating = np.zeros((1, r), bool)
+    alternating[0, ::2] = True  # 0101... -> r runs
+    assert runcount(pack(jnp.asarray(alternating))) == r
+    assert runcount(jnp.zeros((1, 64), jnp.uint32)) == 1  # constant: one run
+    assert runcount(jnp.full((1, 64), 0xFFFFFFFF, jnp.uint32)) == 1
+    half = np.zeros((1, r), bool)
+    half[0, : r // 2] = True
+    assert runcount(pack(jnp.asarray(half))) == 2
+    # collections sum per-bitmap counts
+    both = np.vstack([alternating, half])
+    assert runcount(pack(jnp.asarray(both))) == r + 2
+
+
+def test_legacy_blockrle_shim():
+    """core.blockrle re-exports the storage implementations unchanged."""
+    from repro.core import blockrle as legacy
+    from repro.storage import tiles as storage_tiles
+
+    assert legacy.classify_tiles is storage_tiles.classify_tiles
+    assert legacy.rbmrg_block_threshold is storage_tiles.rbmrg_block_threshold
+    assert legacy.runcount is storage_tiles.runcount
+    assert legacy.BlockStats is storage_tiles.BlockStats
 
 
 def test_extreme_case_all_clean():

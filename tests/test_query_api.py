@@ -169,13 +169,36 @@ def test_compiled_cache_shared_across_indexes(data):
 def test_virtual_column_roundtrip(idx, data):
     bits, counts = data
     hot = idx.execute(Threshold(3))
-    idx.add_column("hot", hot)
-    assert "hot" in idx
+    idx2 = idx.add_column("hot", hot)
+    assert "hot" in idx2 and "hot" not in idx  # add_column returns a NEW index
     np.testing.assert_array_equal(
-        got(idx, And("hot", Not("c0"))), (counts >= 3) & ~bits[0]
+        got(idx2, And("hot", Not("c0"))), (counts >= 3) & ~bits[0]
     )
     with pytest.raises(ValueError):
-        idx.add_column("hot", hot)
+        idx2.add_column("hot", hot)
+
+
+def test_stale_index_reference_survives_add_column(idx, data):
+    """A reference taken before add_column keeps planning/executing against
+    its own schema (indexes are immutable TileStore wrappers)."""
+    bits, counts = data
+    stale = idx
+    before_names = stale.names
+    hot = idx.execute(Threshold(3))
+    grown = idx.add_column("hot", hot)
+    # the stale index: unchanged schema, still plans and executes correctly
+    assert stale.names == before_names
+    assert stale.n == N and grown.n == N + 1
+    plan = stale.explain(Threshold(4))
+    assert plan.algorithm in ("fused", "ssum", "tiled_fused", "looped")
+    np.testing.assert_array_equal(got(stale, Threshold(4)), counts >= 4)
+    with pytest.raises(KeyError):
+        stale.execute(Col("hot"))
+    # Threshold over ALL columns means different member sets per index
+    np.testing.assert_array_equal(got(stale, Threshold(N)), counts >= N)
+    np.testing.assert_array_equal(
+        got(grown, Threshold(N + 1)), (counts + (counts >= 3)) >= N + 1
+    )
 
 
 def test_tail_masking_is_canonical(data):
@@ -212,6 +235,8 @@ def test_functional_execute_matches_index(data):
 def test_errors(idx):
     with pytest.raises(KeyError):
         idx.execute(Col("nope"))
+    with pytest.raises(KeyError):  # explain and execute agree on bad names
+        idx.explain(Threshold(1, over=(Col("nope"),)))
     with pytest.raises(ValueError):
         idx.execute(And(Interval(2, 3), Parity()), backend="looped")
     with pytest.raises(ValueError):

@@ -1,0 +1,247 @@
+"""Storage engine: TileStore classification/layout, tiled execution vs the
+scancount oracle, planner cost model, stats-cache fix, shim deprecation."""
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bitmaps import pack, unpack
+from repro.core.circuits import build_interval_circuit, build_threshold_circuit
+from repro.query import And, BitmapIndex, Col, Interval, Not, Parity, Threshold
+from repro.storage import (
+    TILE_DIRTY,
+    TILE_ONE,
+    TILE_RUN,
+    TILE_ZERO,
+    TileStore,
+    run_tiled_circuit,
+)
+
+TW = 64
+SPAN = TW * 32  # bit positions per tile
+
+
+def _tiled_bits(n, n_tiles, clean_fraction, seed=0, tail_bits=0):
+    """Columns whose tiles are all-zero/all-one with prob clean_fraction."""
+    rng = np.random.default_rng(seed)
+    r = n_tiles * SPAN + tail_bits
+    bits = np.zeros((n, r), bool)
+    total = n_tiles + (1 if tail_bits else 0)
+    for i in range(n):
+        for tj in range(total):
+            lo, hi = tj * SPAN, min((tj + 1) * SPAN, r)
+            u = rng.random()
+            if u < clean_fraction / 2:
+                pass  # all-zero
+            elif u < clean_fraction:
+                bits[i, lo:hi] = True
+            else:
+                bits[i, lo:hi] = rng.random(hi - lo) < 0.4
+    return bits
+
+
+# ---------------------------------------------------------------------------
+# TileStore layout + classification
+# ---------------------------------------------------------------------------
+
+
+def test_tile_classes_and_dirty_packing():
+    r = 4 * SPAN
+    bits = np.zeros((3, r), bool)
+    bits[0, :SPAN] = True              # tile 0: all-one
+    bits[1, SPAN : SPAN + 100] = True  # tile 1: run (single transition)
+    bits[2] = np.random.default_rng(0).random(r) < 0.5  # all dirty
+    store = TileStore.from_packed(pack(jnp.asarray(bits)), tile_words=TW, r=r)
+    assert store.classes[0].tolist() == [TILE_ONE, TILE_ZERO, TILE_ZERO, TILE_ZERO]
+    assert store.classes[1].tolist() == [TILE_ZERO, TILE_RUN, TILE_ZERO, TILE_ZERO]
+    assert (store.classes[2] == TILE_DIRTY).all()
+    # dirty array holds exactly the dirty/run tiles; offsets point into it
+    assert store.dirty.shape == (1 + 4, TW)
+    assert store.dirty_index[1, 1] >= 0 and store.dirty_index[0, 0] == -1
+    np.testing.assert_array_equal(np.asarray(store.densify()), np.asarray(pack(jnp.asarray(bits))))
+    # per-column build-time stats
+    assert store.col_stats[0].cardinality == SPAN
+    assert store.col_stats[0].runcount == 2
+    assert store.col_stats[1].runcount == 3
+    assert store.col_stats[2].n_dirty_tiles == 4
+
+
+def test_partial_final_tile_is_conservative_and_correct():
+    r = 2 * SPAN + 777  # final tile partial
+    bits = np.ones((2, r), bool)
+    store = TileStore.from_packed(pack(jnp.asarray(bits)), tile_words=TW, r=r)
+    assert store.n_tiles == 3
+    assert (store.classes[:, :2] == TILE_ONE).all()
+    # padded words are zero, so an all-ones partial tile classifies dirty/run
+    assert (store.classes[:, 2] >= TILE_DIRTY).all()
+    np.testing.assert_array_equal(np.asarray(store.densify()), np.asarray(pack(jnp.asarray(bits))))
+
+
+def test_append_replace_share_and_reclassify():
+    bits = _tiled_bits(4, 6, 0.5, seed=1)
+    bm = np.asarray(pack(jnp.asarray(bits)))
+    store = TileStore.from_packed(bm)
+    grown = store.append(bm[0])
+    assert grown.n == 5 and store.n == 4
+    np.testing.assert_array_equal(grown.classes[4], store.classes[0])
+    swapped = grown.replace(2, np.zeros(store.n_words, np.uint32))
+    assert (swapped.classes[2] == TILE_ZERO).all()
+    assert swapped.col_stats[2].cardinality == 0
+    np.testing.assert_array_equal(
+        np.asarray(swapped.densify())[[0, 1, 3, 4]], np.asarray(grown.densify())[[0, 1, 3, 4]]
+    )
+
+
+def test_member_stats_per_subset_not_index_mean():
+    n_tiles = 8
+    clean = np.zeros((1, n_tiles * SPAN), bool)  # fully clean column
+    dirty = np.random.default_rng(3).random((1, n_tiles * SPAN)) < 0.5
+    store = TileStore.from_packed(pack(jnp.asarray(np.vstack([clean, dirty]))))
+    assert store.member_stats([0]).clean_fraction == 1.0
+    assert store.member_stats([1]).clean_fraction == 0.0
+    assert 0.0 < store.member_stats(None).clean_fraction < 1.0
+    assert store.member_stats([0]).dirty_words == 0
+
+
+# ---------------------------------------------------------------------------
+# Tiled execution vs oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("clean_fraction", [0.0, 0.9, 1.0])
+def test_tiled_circuit_threshold_matches_oracle(clean_fraction):
+    n = 9
+    bits = _tiled_bits(n, 5, clean_fraction, seed=7, tail_bits=500)
+    r = bits.shape[1]
+    counts = bits.sum(0)
+    store = TileStore.from_packed(pack(jnp.asarray(bits)), r=r)
+    for t in (1, 3, n - 1, n):
+        circ = build_threshold_circuit(n, t, "ssum")
+        out, info = run_tiled_circuit(store, circ)
+        np.testing.assert_array_equal(
+            np.asarray(unpack(out, r)), counts >= t, err_msg=f"cf={clean_fraction} t={t}"
+        )
+    if clean_fraction == 1.0:
+        assert info["dirty_words_gathered"] <= store.tile_words * store.n_tiles
+
+
+def test_tiled_circuit_multi_output_shares_gather():
+    n = 8
+    bits = _tiled_bits(n, 6, 0.8, seed=11)
+    r = bits.shape[1]
+    counts = bits.sum(0)
+    c1 = build_threshold_circuit(n, 3, "ssum")
+    c2 = build_interval_circuit(n, 2, 5)
+    # one multi-output circuit: merge manually via the query layer instead
+    idx = BitmapIndex.from_dense(jnp.asarray(bits))
+    res = idx.execute_many([Threshold(3), Interval(2, 5)], backend="tiled_fused")
+    np.testing.assert_array_equal(np.asarray(unpack(res[0], r)), counts >= 3)
+    np.testing.assert_array_equal(
+        np.asarray(unpack(res[1], r)), (counts >= 2) & (counts <= 5)
+    )
+    # the batch shared ONE tile gather (k outputs, one info record)
+    assert idx.last_info["n_outputs"] == 2
+    single, _ = run_tiled_circuit(idx.store, c1)
+    both_words = idx.last_info["dirty_words_gathered"]
+    _, info1 = run_tiled_circuit(idx.store, c1)
+    _, info2 = run_tiled_circuit(idx.store, c2)
+    assert both_words <= info1["dirty_words_gathered"] + info2["dirty_words_gathered"]
+
+
+def test_tiled_composite_gets_skipping():
+    """Interval/And/Not compositions -- not just bare thresholds -- skip."""
+    n = 6
+    bits = _tiled_bits(n, 10, 0.95, seed=13)
+    r = bits.shape[1]
+    counts = bits.sum(0)
+    idx = BitmapIndex.from_dense(jnp.asarray(bits))
+    q = And(Interval(2, 4), Not(Col("c0")))
+    expect = (counts >= 2) & (counts <= 4) & ~bits[0]
+    out = idx.execute(q, backend="tiled_fused")
+    np.testing.assert_array_equal(np.asarray(unpack(out, r)), expect)
+    assert idx.last_info["work_fraction"] < 0.5, idx.last_info
+    # and the planner chooses the tiled path by itself on this data
+    plan = idx.explain(q)
+    assert plan.algorithm == "tiled_fused", plan
+    assert plan.cost is not None and plan.cost < n * idx.n_words
+
+
+def test_planner_cost_model_per_member_subset():
+    """Thresholds over a clean subset plan tiled even when the index-wide
+    mean is dirty (the per-column-stats requirement)."""
+    n_tiles = 8
+    clean = _tiled_bits(4, n_tiles, 1.0, seed=17)
+    dirty = _tiled_bits(4, n_tiles, 0.0, seed=18)
+    bits = np.vstack([clean, dirty])
+    idx = BitmapIndex.from_dense(jnp.asarray(bits))
+    clean_cols = tuple(f"c{i}" for i in range(4))
+    dirty_cols = tuple(f"c{i}" for i in range(4, 8))
+    assert idx.explain(Threshold(2, over=clean_cols)).algorithm == "tiled_fused"
+    assert idx.explain(Threshold(2, over=dirty_cols)).algorithm != "tiled_fused"
+    # candidates carry per-backend words-touched estimates
+    plan = idx.explain(Threshold(2, over=clean_cols))
+    names = [name for name, _ in plan.candidates]
+    assert "tiled_fused" in names and "fused" in names
+    counts = clean.sum(0)
+    out = idx.execute(Threshold(2, over=clean_cols))
+    np.testing.assert_array_equal(np.asarray(unpack(out, bits.shape[1])), counts >= 2)
+
+
+# ---------------------------------------------------------------------------
+# Satellite regressions
+# ---------------------------------------------------------------------------
+
+
+def test_stats_cache_respects_tile_words():
+    """stats(tile_words=128) after stats(tile_words=64) must not return the
+    64-word-granularity numbers (the seed's cache ignored the argument)."""
+    # one 64-word all-one tile next to one dirty tile: at 128-word tiles the
+    # pair merges into a single dirty tile, so clean_fraction must change
+    bits = np.zeros((1, 2 * SPAN), bool)
+    bits[0, :SPAN] = True
+    bits[0, SPAN::3] = True
+    idx = BitmapIndex.from_dense(jnp.asarray(bits))
+    s64 = idx.stats(tile_words=64)
+    s128 = idx.stats(tile_words=128)
+    assert s64.tile_words == 64 and s128.tile_words == 128
+    assert s64.clean_fraction == 0.5
+    assert s128.clean_fraction == 0.0
+    assert idx.stats(tile_words=64) is s64  # still cached, per granularity
+    assert idx.stats(tile_words=128) is s128
+
+
+def test_single_consolidated_shim_deprecation_warning():
+    """The whole fused_*/symmetric shim family warns once per process."""
+    from repro.core.deprecation import reset_legacy_shim_warning
+    from repro.core.symmetric import interval, parity
+    from repro.kernels.ops import fused_interval, fused_threshold
+
+    bits = np.random.default_rng(5).random((6, 200)) < 0.4
+    bm = pack(jnp.asarray(bits))
+    reset_legacy_shim_warning()
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        fused_threshold(bm, 2)
+        interval(bm, 1, 3)
+        parity(bm)
+        fused_interval(bm, 1, 3)
+    ours = [
+        w for w in caught
+        if issubclass(w.category, DeprecationWarning)
+        and "deprecated shim" in str(w.message)
+    ]
+    assert len(ours) == 1, [str(w.message) for w in caught]
+
+
+def test_shims_route_through_tiled_path_on_clean_data():
+    from repro.core.deprecation import reset_legacy_shim_warning
+    from repro.kernels.ops import fused_threshold
+
+    bits = _tiled_bits(5, 8, 1.0, seed=23)
+    counts = bits.sum(0)
+    reset_legacy_shim_warning()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        out = fused_threshold(pack(jnp.asarray(bits)), 2)
+    np.testing.assert_array_equal(np.asarray(unpack(out, bits.shape[1])), counts >= 2)

@@ -7,14 +7,8 @@ import os
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (
-    classify_tiles,
-    plan_threshold,
-    rbmrg_block_threshold,
-    threshold,
-    to_positions_np,
-    unpack,
-)
+from repro.core import plan_threshold, rbmrg_block_threshold, threshold, unpack
+from repro.storage import TileStore
 from repro.data.paper_datasets import similarity_query, synthetic_dataset
 
 
@@ -30,8 +24,8 @@ def test_similarity_query_end_to_end():
     np.testing.assert_array_equal(oracle, circuit)
     # the query item itself must qualify (it is in every selected bitmap)
     assert oracle[rid]
-    # planner route with block stats
-    stats = classify_tiles(bm)
+    # planner route with tile stats from the storage engine
+    stats = TileStore.from_packed(bm).block_stats()
     plan = plan_threshold(16, t, clean_fraction=stats.clean_fraction)
     if plan.algorithm == "rbmrg_block":
         out, info = rbmrg_block_threshold(bm, t, stats=stats)
