@@ -8,13 +8,18 @@
   * clean-fraction sweep: dense fused kernel vs the storage engine's
     ``tiled_fused`` executor at clean fractions {0.0, 0.5, 0.9, 0.99} --
     wall time AND words touched (the roofline term), written to
-    ``BENCH_query.json`` so CI tracks the perf trajectory.
+    ``BENCH_query.json`` so CI tracks the perf trajectory;
+  * shard-count sweep (1/2/4/8 row shards, mixed-density data): wall time +
+    per-shard backend + per-shard words touched, so the trajectory captures
+    scaling efficiency of the sharded engine, not just single-device
+    numbers.  With >= 8 XLA devices the 8-shard point runs on a real mesh.
 """
 from __future__ import annotations
 
 import json
 import time
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -29,6 +34,7 @@ from repro.query import (
 )
 
 CLEAN_FRACTIONS = (0.0, 0.5, 0.9, 0.99)
+SHARD_COUNTS = (1, 2, 4, 8)
 
 
 def _time(fn, reps=5):
@@ -94,6 +100,66 @@ def clean_fraction_sweep(smoke: bool = False) -> list:
     return sweep
 
 
+def _mixed_density_bits(n, n_tiles, seed=0, span=64 * 32):
+    """Half the row space dense (cf=0.0), half mostly clean (cf=0.95)."""
+    rng = np.random.default_rng(seed)
+    bits = np.zeros((n, n_tiles * span), bool)
+    for i in range(n):
+        for tj in range(n_tiles):
+            lo, hi = tj * span, (tj + 1) * span
+            if tj < n_tiles // 2:
+                bits[i, lo:hi] = rng.random(span) < 0.35
+            else:
+                u = rng.random()
+                if u < 0.475:
+                    pass
+                elif u < 0.95:
+                    bits[i, lo:hi] = True
+                else:
+                    bits[i, lo:hi] = rng.random(span) < 0.35
+    return bits
+
+
+def shard_sweep(smoke: bool = False) -> list:
+    """Row-shard scaling: wall time + per-shard backends + words touched."""
+    n, n_tiles = (8, 8) if smoke else (16, 48)
+    bits = _mixed_density_bits(n, n_tiles, seed=11)
+    idx = BitmapIndex.from_dense(jnp.asarray(bits))
+    q = Threshold(n // 2)
+    out = []
+    for s in SHARD_COUNTS:
+        mesh = None
+        if s == len(jax.devices()) > 1:
+            from repro.launch.mesh import make_host_mesh
+
+            mesh = make_host_mesh(data=s, model=1)
+        sidx = idx.shard(mesh=mesh, n_shards=s)
+        t = _time(lambda: sidx.execute(q).gather().block_until_ready())
+        info = sidx.last_info
+        per_shard = []
+        if info["mode"] == "per_shard":
+            for sh, be, inf in zip(
+                sidx.store.shards, info["backends"], info["per_shard"]
+            ):
+                words = (
+                    inf["dirty_words_gathered"] + sh.n_words
+                    if inf is not None
+                    else sh.n * sh.n_words + sh.n_words
+                )
+                per_shard.append({"backend": be, "words_touched": int(words)})
+        out.append(
+            {
+                "n_shards": sidx.n_shards,
+                "mesh": mesh is not None,
+                "mode": info["mode"],
+                "wall_us": t * 1e6,
+                "backends": list(info["backends"]),
+                "per_shard": per_shard,
+            }
+        )
+    return out
+
+
 def run(smoke: bool = False, sweep: list | None = None):
     out = []
     rng = np.random.default_rng(0)
@@ -152,12 +218,14 @@ def run(smoke: bool = False, sweep: list | None = None):
 
 
 def write_json(path: str = "BENCH_query.json", smoke: bool = False,
-               sweep: list | None = None) -> dict:
+               sweep: list | None = None, shards: list | None = None) -> dict:
     """Write the perf-trajectory artifact consumed by CI."""
     payload = {
         "bench": "query",
         "smoke": bool(smoke),
+        "n_devices": len(jax.devices()),
         "clean_fraction_sweep": sweep if sweep is not None else clean_fraction_sweep(smoke),
+        "shard_sweep": shards if shards is not None else shard_sweep(smoke),
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)
@@ -169,13 +237,19 @@ if __name__ == "__main__":
 
     smoke = "--smoke" in sys.argv
     sweep = clean_fraction_sweep(smoke)  # measured once, printed + persisted
+    shards = shard_sweep(smoke)
     for name, val, extra in run(smoke, sweep=sweep):
         print(f"{name},{val:.2f},{extra}")
-    write_json(smoke=smoke, sweep=sweep)
+    write_json(smoke=smoke, sweep=sweep, shards=shards)
     for row in sweep:
         be = row["backends"]
         print(
             f"cf={row['clean_fraction']}: fused {be['fused']['words_touched']} words, "
             f"tiled {be['tiled_fused']['words_touched']} words"
+        )
+    for row in shards:
+        print(
+            f"shards={row['n_shards']} ({row['mode']}): {row['wall_us']:.0f} us, "
+            f"backends {sorted(set(row['backends']))}"
         )
     print("wrote BENCH_query.json")

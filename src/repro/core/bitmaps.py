@@ -8,6 +8,8 @@ positions -- this is the paper's W (machine word) scaled to the vector unit.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -29,6 +31,7 @@ __all__ = [
     "bitmap_andnot",
     "bitmap_not",
     "tail_mask",
+    "packed_tail_mask",
     "from_positions",
     "to_positions_np",
     "density",
@@ -44,6 +47,25 @@ def tail_mask(r: int) -> int:
     """Mask of valid bits in the final word for universe size ``r``."""
     rem = int(r) % WORD_BITS
     return 0xFFFFFFFF if rem == 0 else (1 << rem) - 1
+
+
+@functools.lru_cache(maxsize=256)
+def packed_tail_mask(r: int, n_words: int) -> jax.Array:
+    """Per-word mask uint32[n_words] keeping only bits below ``r``.
+
+    ``None`` when no masking is needed (``r`` fills every word) so callers
+    can skip the AND entirely.  Cached: (r, n_words) pairs recur per index
+    and per shard, and the mask never changes.
+    """
+    r, n_words = int(r), int(n_words)
+    if r >= n_words * WORD_BITS:
+        return None
+    mask = np.zeros(n_words, dtype=np.uint32)
+    full = r // WORD_BITS
+    mask[:full] = 0xFFFFFFFF
+    if r % WORD_BITS:
+        mask[full] = tail_mask(r)
+    return jnp.asarray(mask)
 
 
 def pack(bits: jax.Array) -> jax.Array:

@@ -260,6 +260,40 @@ class Circuit:
                 )._dce()
         return const, residual, kept
 
+    def semantic_key(self) -> tuple:
+        """Gate-order-independent identity of the computed function(s).
+
+        A Merkle hash over the DAG: each node's digest is built from its op
+        and its operands' digests (sorted for commutative ops), so two
+        circuits that encode the same expression DAG with different gate
+        orderings -- e.g. residuals of :meth:`specialize` under different
+        constant assignments that fold to the same shape -- get the same
+        key.  The tiled executor merges such residuals into one kernel
+        launch.  ``n_inputs`` is part of the key because callers gather one
+        data row per declared input, read or not.
+        """
+        import hashlib
+
+        digests: dict[int, bytes] = {}
+
+        def key_of(i: int) -> bytes:
+            if i == CONST0:
+                return b"0"
+            if i == CONST1:
+                return b"1"
+            if i < self.n_inputs:
+                return b"i%d" % i
+            return digests[i]
+
+        for idx, (op, a, b) in enumerate(self.ops):
+            ka, kb = key_of(a), key_of(b)
+            if op in ("and", "or", "xor") and kb < ka:
+                ka, kb = kb, ka
+            digests[self.n_inputs + idx] = hashlib.md5(
+                b"%s(%s,%s)" % (op.encode(), ka, kb)
+            ).digest()
+        return (self.n_inputs, tuple(key_of(o) for o in self.outputs))
+
     # -- evaluation -------------------------------------------------------
     def evaluate(self, inputs: Sequence, zeros=None, ones=None):
         """Evaluate the DAG over word arrays (or Python ints for testing)."""

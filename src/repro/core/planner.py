@@ -50,8 +50,23 @@ __all__ = [
 CIRCUIT_BACKENDS = ("circuit", "fused", "tiled_fused")
 
 # tiled execution wins when its gathered words undercut the dense sweep by
-# at least this factor (covers gather/launch overhead per signature group)
+# at least this factor (covers the host-side gather/scatter bookkeeping)
 _TILED_ADVANTAGE = 0.5
+
+# words-equivalent fixed cost of one residual-kernel dispatch (trace/launch
+# overhead).  BENCH_query.json showed tiled_fused 5-16x slower on wall time
+# than fused at clean_fraction <= 0.5 despite touching fewer words, because
+# 8 specialization signatures meant 8 launches; pricing each launch group
+# stops the planner from preferring tiled there while leaving the
+# clean-dominated regime (where almost everything folds constant) tiled.
+_LAUNCH_OVERHEAD_WORDS = 256.0
+
+# the tiled executor specializes at most this many signatures exactly;
+# overflow tiles fall back to a dense gather of the full member support,
+# and the estimate must price that.  This is the CANONICAL constant --
+# storage/tiled imports it, so the cost model and the executor cannot
+# diverge on the exact-vs-overflow split.
+_MAX_EXACT_SIGNATURES = 64
 
 
 @dataclasses.dataclass
@@ -80,6 +95,7 @@ def estimate_words_touched(
     predict wall time.
     """
     nw = float(n_words)
+    t_known = t is not None  # None: not a bare threshold (composite circuit)
     t = int(t) if t is not None else max(1, n // 2)
     dense = n * nw
     if backend in ("wide_or", "wide_and"):
@@ -98,8 +114,45 @@ def estimate_words_touched(
     if backend == "tiled_fused":
         if stats is None:
             return None
-        # gathered dirty words + one output pass + per-tile bookkeeping
         n_tiles = max(1, int(nw) // max(1, stats.tile_words))
+        sigs = getattr(stats, "signatures", ())
+        if sigs:
+            # Per-signature model: a signature launches a residual kernel only
+            # when the circuit cannot fold it constant; for a bare threshold
+            # that is exactly 0 < T - #ones <= #dirty (RBMRG case 3).  Without
+            # a known T, any signature with dirty members may launch.  Launch
+            # groups are counted after the executor's structural merge: bare
+            # thresholds with equal (T - #ones, #dirty) share one kernel.
+            gathered = 0
+            groups = set()
+            # mirror the executor: only the most populous signatures get
+            # exact specialization; overflow tiles run a dense gather of
+            # the full member support (one extra launch)
+            exact = sorted(sigs, key=lambda s: -s[0])[:_MAX_EXACT_SIGNATURES]
+            overflow_tiles = sum(cnt for cnt, _, _ in sigs) - sum(
+                cnt for cnt, _, _ in exact
+            )
+            for cnt, ones, dirty in exact:
+                if t_known:
+                    tt = t - ones
+                    if tt <= 0 or tt > dirty:
+                        continue  # case 1/2: folds constant, no gather
+                    groups.add((tt, dirty))
+                else:
+                    if dirty == 0:
+                        continue
+                    groups.add(dirty)
+                gathered += cnt * dirty * stats.tile_words
+            launches = len(groups)
+            if overflow_tiles:
+                gathered += overflow_tiles * n * stats.tile_words
+                launches += 1
+            return (
+                float(gathered) + nw + n_tiles
+                + _LAUNCH_OVERHEAD_WORDS * launches
+            )
+        # no signature stats: gathered dirty words + one output pass +
+        # per-tile bookkeeping (the legacy coarse estimate)
         return float(stats.dirty_words) + nw + n_tiles
     if backend == "rbmrg_block":
         if stats is None:

@@ -41,10 +41,16 @@ from .expr import (
     Weighted,
 )
 from .compile import build_query_circuit
-from .executors import THRESHOLD_BACKENDS, run_threshold_backend
+from .executors import (
+    THRESHOLD_BACKENDS,
+    ShardContext,
+    run_plan,
+    run_threshold_backend,
+)
 from .index import (
     BitmapIndex,
     IndexStats,
+    circuit_for,
     clear_compiled_cache,
     compiled_cache_info,
     execute,
@@ -67,7 +73,10 @@ __all__ = [
     "BitmapIndex",
     "IndexStats",
     "execute",
+    "circuit_for",
     "build_query_circuit",
+    "run_plan",
+    "ShardContext",
     "run_threshold_backend",
     "THRESHOLD_BACKENDS",
     "compiled_cache_info",

@@ -1,4 +1,4 @@
-"""Executable backends for threshold plans.
+"""Executable backends for threshold plans, behind ONE dispatch point.
 
 Every algorithm name the planner can emit resolves here (the seed repo's
 planner produced ``wide_or`` / ``rbmrg_block`` / ``dsk`` names that
@@ -15,18 +15,34 @@ planner produced ``wide_or`` / ``rbmrg_block`` / ``dsk`` names that
     thresholds only (repro.storage.tiles; tiled_fused generalises it)
   * dsk                    -- DivideSkip over host position lists, for the
     paper's sparse, T~N regime where pruning beats bit-parallel work
+
+Backends are *shard-local* functions: they see one :class:`ShardContext`
+(the tile store, dense view, compiled circuit and bare-threshold shape of
+one row-range of the index) and never touch device placement themselves.
+:func:`run_plan` is the single entrypoint that dispatches a plan against a
+context -- ``BitmapIndex`` builds one context for its whole row space, the
+sharded engine (``repro.dist.query``) builds one per device shard and can
+hand each shard a different plan.
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bitmaps import WORD_DTYPE, from_positions, to_positions_np
+from repro.core.planner import CIRCUIT_BACKENDS
 
-__all__ = ["THRESHOLD_BACKENDS", "run_threshold_backend"]
+__all__ = [
+    "THRESHOLD_BACKENDS",
+    "ShardContext",
+    "run_plan",
+    "run_threshold_backend",
+]
 
 _DEVICE_ALGOS = (
     "scancount", "scancount_streaming", "looped", "csvckt",
@@ -78,6 +94,86 @@ def _dsk_threshold(bitmaps: jax.Array, t: int) -> jax.Array:
     r = arr.shape[1] * 32
     lists = [to_positions_np(row) for row in arr]
     return from_positions(dsk(lists, t, r), r)
+
+
+@dataclasses.dataclass
+class ShardContext:
+    """Everything a shard-local backend needs to execute one plan.
+
+    A *shard* is a row-range of the universe: the whole index on a single
+    device, or one device's tile range under ``repro.dist.query``.  Data
+    accessors are thunks so a backend only pays for the representation it
+    reads -- ``tiled_fused`` builds the tile store, dense backends pull the
+    packed view, and neither forces the other.
+    """
+
+    n: int  # columns in the shard (same for every shard of an index)
+    dense: Callable  # () -> uint32[n, local_words] packed dense view
+    store: Callable | None = None  # () -> TileStore (tile-classified shard)
+    circuit: Callable | None = None  # () -> compiled Circuit (shared, cached)
+    bare: tuple | None = None  # (member slots | None, T) for bare thresholds
+    column: int | None = None  # slot for 'column' plans
+    block_words: int | None = None
+
+    def member_rows(self) -> jax.Array:
+        """Dense rows of the bare-threshold member subset."""
+        rows = self.dense()
+        slots = self.bare[0]
+        if slots is not None:
+            rows = rows[jnp.asarray(list(slots))]
+        return rows
+
+
+def run_plan(ctx: ShardContext, plan):
+    """THE executor entrypoint: run one plan against one shard's data.
+
+    ``plan`` is a ``core.planner.Plan`` or a backend name.  Returns
+    ``(packed result, info | None)`` -- ``info`` is the tiled executor's
+    case-split accounting when it ran, else None.  Every backend resolves
+    through here; callers own device placement, backends own compute.
+    """
+    alg = getattr(plan, "algorithm", plan)
+    if alg == "column":
+        if ctx.column is None:
+            raise ValueError("'column' plan without a column slot in the context")
+        return ctx.dense()[ctx.column], None
+    if alg == "tiled_fused":
+        if ctx.store is None or ctx.circuit is None:
+            raise ValueError("'tiled_fused' needs a tile store and a compiled circuit")
+        from repro.storage import run_tiled_circuit
+
+        out, info = run_tiled_circuit(
+            ctx.store(), ctx.circuit(), block_words=ctx.block_words
+        )
+        return out, info
+    if alg in THRESHOLD_BACKENDS and ctx.bare is not None:
+        return (
+            run_threshold_backend(
+                ctx.member_rows(), ctx.bare[1], alg, block_words=ctx.block_words
+            ),
+            None,
+        )
+    if alg in CIRCUIT_BACKENDS:
+        from repro.kernels.threshold_ssum import INTERPRET, run_circuit_cached
+
+        if ctx.circuit is None:
+            raise ValueError(f"backend {alg!r} needs a compiled circuit in the context")
+        return (
+            run_circuit_cached(
+                ctx.dense(),
+                ctx.circuit(),
+                block_words=ctx.block_words,
+                interpret=INTERPRET,
+                pallas=alg == "fused",
+            ),
+            None,
+        )
+    if alg in THRESHOLD_BACKENDS:
+        raise ValueError(
+            f"backend {alg!r} only executes bare Threshold queries; "
+            "use 'circuit', 'fused' or 'tiled_fused' for composite expressions"
+        )
+    raise ValueError(f"unknown backend {alg!r}")
 
 
 def run_threshold_backend(

@@ -35,18 +35,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.bitmaps import WORD_DTYPE, cardinality, pack, tail_mask
+from repro.core.bitmaps import WORD_DTYPE, cardinality, pack, packed_tail_mask
 from repro.core.planner import CIRCUIT_BACKENDS, Plan, plan_query
 from repro.storage import TileStore, run_tiled_circuit
 
 from .compile import build_query_circuit
 from .expr import Col, Query, Threshold, as_query
-from .executors import THRESHOLD_BACKENDS, run_threshold_backend
+from .executors import ShardContext, run_plan
 
 __all__ = [
     "BitmapIndex",
     "IndexStats",
     "execute",
+    "circuit_for",
     "compiled_cache_info",
     "clear_compiled_cache",
 ]
@@ -81,6 +82,51 @@ def clear_compiled_cache() -> None:
 
 def _fused_available() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def member_slots(q: Query, slot: dict):
+    """Column slots a bare-threshold query actually reads (None: all).
+    Shared by the single-device and sharded engines -- slots index any
+    shard's rows identically."""
+    if type(q) is Threshold and q.over is not None and all(
+        type(m) is Col for m in q.over
+    ):
+        for m in q.over:
+            if m.name not in slot:
+                raise KeyError(
+                    f"unknown column {m.name!r}; index has {sorted(slot)[:8]}..."
+                )
+        return [slot[m.name] for m in q.over]
+    return None
+
+
+def bare_slots(q: Query, slot: dict):
+    """(member slots | None, t) when q is a Threshold over plain columns
+    (None slots: every column), else None."""
+    if type(q) is not Threshold:
+        return None
+    if q.over is None:
+        return None, q.t
+    slots = member_slots(q, slot)
+    if slots is None:
+        return None
+    return tuple(slots), q.t
+
+
+def circuit_for(qs: tuple, n: int, names: tuple):
+    """The (process-cached) multi-output circuit compiling ``qs`` over a
+    schema.  Module-level so the sharded engine (``repro.dist.query``)
+    compiles ONE circuit per query shape and shares it across every shard
+    -- per-shard *plans* differ, the circuit never does."""
+    key = (tuple(q.key() for q in qs), tuple(names))
+    circ = _CIRCUITS.get(key)
+    if circ is not None:
+        _CACHE_INFO["hits"] += 1
+        return circ
+    _CACHE_INFO["misses"] += 1
+    circ = build_query_circuit(qs, n, names)
+    _CIRCUITS[key] = circ
+    return circ
 
 
 # ---------------------------------------------------------------------------
@@ -233,6 +279,32 @@ class BitmapIndex:
             names=self._names, _store=self.store.replace(self._slot[name], packed)
         )
 
+    # -- sharding ----------------------------------------------------------
+    def shard(self, mesh=None, axis: str = "data", n_shards: int | None = None):
+        """Partition the row space across devices: a
+        :class:`repro.dist.query.ShardedBitmapIndex` whose shards are
+        contiguous tile ranges, each with its own tile classes, dirty pack
+        and member statistics.  ``execute`` there compiles ONE circuit and
+        plans PER SHARD.  With ``mesh=None`` the shards run host-sequenced
+        (still per-shard-planned); with a mesh, homogeneous dense plans run
+        as one ``shard_map``."""
+        from repro.dist.query import ShardedBitmapIndex
+
+        return ShardedBitmapIndex.from_index(
+            self, mesh=mesh, axis=axis, n_shards=n_shards
+        )
+
+    @classmethod
+    def from_sharded(cls, sharded) -> "BitmapIndex":
+        """Gather a :class:`repro.dist.query.ShardedBitmapIndex` back into a
+        single-device index (the explicit, paid-for gather -- query results
+        never need it, they feed back shard-wise via ``add_column``).  The
+        shards' tile classifications are stitched, not recomputed."""
+        store = TileStore.concat_tiles(
+            sharded.store.shards, n_words=sharded.n_words, r=sharded.r
+        )
+        return cls(names=sharded.names, _store=store)
+
     # -- statistics --------------------------------------------------------
     def stats(self, tile_words: int | None = None, refresh: bool = False) -> IndexStats:
         """Planner statistics at the requested tile granularity.
@@ -267,17 +339,7 @@ class BitmapIndex:
     # -- planning ----------------------------------------------------------
     def _member_slots(self, q: Query):
         """Column slots a bare-threshold query actually reads (None: all)."""
-        if type(q) is Threshold and q.over is not None and all(
-            type(m) is Col for m in q.over
-        ):
-            for m in q.over:
-                if m.name not in self._slot:
-                    raise KeyError(
-                        f"unknown column {m.name!r}; index has "
-                        f"{sorted(self._slot)[:8]}..."
-                    )
-            return [self._slot[m.name] for m in q.over]
-        return None
+        return member_slots(q, self._slot)
 
     def explain(self, query) -> Plan:
         """The plan :meth:`execute` would run.  Plans carry ``cost`` (the
@@ -348,59 +410,50 @@ class BitmapIndex:
         return int(cardinality(self.execute(query, **kw)))
 
     # -- internals ---------------------------------------------------------
+    def _bare_slots(self, q: Query):
+        """(member slots | None, t) when q is a bare threshold, else None."""
+        return bare_slots(q, self._slot)
+
     def _bare_threshold(self, q: Query):
         """(rows, t) when q is a Threshold over plain columns, else None."""
-        if type(q) is not Threshold:
+        bare = self._bare_slots(q)
+        if bare is None:
             return None
-        if q.over is None:
-            return self.columns, q.t
-        if not all(type(m) is Col for m in q.over):
-            return None
-        for m in q.over:
-            if m.name not in self._slot:
-                raise KeyError(
-                    f"unknown column {m.name!r}; index has {sorted(self._slot)[:8]}..."
-                )
-        slots = [self._slot[m.name] for m in q.over]
-        return self.columns[jnp.asarray(slots)], q.t
+        slots, t = bare
+        rows = self.columns
+        if slots is not None:
+            rows = rows[jnp.asarray(slots)]
+        return rows, t
+
+    def _shard_ctx(self, q: Query, block_words) -> ShardContext:
+        """This index's whole row space as one executor shard."""
+        return ShardContext(
+            n=self.n,
+            dense=lambda: self.columns,
+            store=lambda: self.store,
+            circuit=lambda: self._circuit_for((q,)),
+            bare=self._bare_slots(q),
+            column=self._slot[q.name] if type(q) is Col else None,
+            block_words=block_words,
+        )
 
     def _run(self, q: Query, alg: str, block_words) -> jax.Array:
-        if alg == "column":
-            return self.column(q.name)
-        if alg == "tiled_fused":
-            # the storage engine path: ANY query compiles to a circuit and
-            # gets per-tile clean/dirty skipping against the TileStore
-            out, info = run_tiled_circuit(
-                self.store, self._circuit_for((q,)), block_words=block_words
-            )
-            self.last_info = info
-            return out
-        if alg in THRESHOLD_BACKENDS:
-            bare = self._bare_threshold(q)
-            if bare is None:
-                if alg in CIRCUIT_BACKENDS:  # "fused" doubles as both
-                    return self._dense_eval((q,), alg, block_words)
+        try:
+            out, info = run_plan(self._shard_ctx(q, block_words), alg)
+        except ValueError as e:
+            if "only executes bare Threshold" in str(e):
                 raise ValueError(
                     f"backend {alg!r} only executes bare Threshold queries; "
                     f"use 'circuit', 'fused' or 'tiled_fused' for {type(q).__name__}"
-                )
-            rows, t = bare
-            return run_threshold_backend(rows, t, alg, block_words=block_words)
-        if alg in CIRCUIT_BACKENDS:
-            return self._dense_eval((q,), alg, block_words)
-        raise ValueError(f"unknown backend {alg!r}")
+                ) from None
+            raise
+        if info is not None:
+            self.last_info = info
+        return out
 
     def _circuit_for(self, qs: tuple):
         """The (cached) multi-output circuit compiling ``qs`` over this schema."""
-        key = (tuple(q.key() for q in qs), self._names)
-        circ = _CIRCUITS.get(key)
-        if circ is not None:
-            _CACHE_INFO["hits"] += 1
-            return circ
-        _CACHE_INFO["misses"] += 1
-        circ = build_query_circuit(qs, self.n, self._names)
-        _CIRCUITS[key] = circ
-        return circ
+        return circuit_for(qs, self.n, self._names)
 
     def _dense_eval(self, qs: tuple, backend: str, block_words) -> jax.Array:
         """Compile ``qs`` and evaluate over the dense column view."""
@@ -415,14 +468,8 @@ class BitmapIndex:
         )
 
     def _mask(self, out: jax.Array) -> jax.Array:
-        if self.r >= self.n_words * 32:
-            return out
-        mask = np.zeros(self.n_words, dtype=np.uint32)
-        full = self.r // 32
-        mask[:full] = 0xFFFFFFFF
-        if self.r % 32:
-            mask[full] = tail_mask(self.r)
-        return jnp.bitwise_and(out, jnp.asarray(mask))
+        mask = packed_tail_mask(self.r, self.n_words)
+        return out if mask is None else jnp.bitwise_and(out, mask)
 
 
 def execute(bitmaps, query, *, r: int | None = None, backend: str | None = None,

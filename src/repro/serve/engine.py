@@ -37,12 +37,18 @@ class Request:
 
 
 class ServeEngine:
-    def __init__(self, cfg: ModelConfig, params, batch_slots: int = 8, max_seq: int = 256):
+    def __init__(self, cfg: ModelConfig, params, batch_slots: int = 8,
+                 max_seq: int = 256, mesh=None):
         assert not cfg.encoder_only, "encoder-only archs have no decode step"
         self.cfg = cfg
         self.params = params
         self.slots = batch_slots
         self.max_seq = max_seq
+        #: optional device mesh: slot-selection queries then run through the
+        #: row-sharded engine (repro.dist.query) -- the slot universe is
+        #: split across devices and selections stay device-resident until
+        #: the positions are read out
+        self.mesh = mesh
         self.cache = init_cache(cfg, batch_slots, max_seq, jnp.float32)
         self.requests: list[Request | None] = [None] * batch_slots
         self.pos = np.zeros(batch_slots, np.int64)
@@ -50,7 +56,7 @@ class ServeEngine:
         self.step_count = 0
         self._slot_version = 0  # bumped whenever slot occupancy/positions move
         self._slot_cache: dict = {}
-        self._slot_base: "BitmapIndex | None" = None  # reused across versions
+        self._slot_base = None  # (Sharded)BitmapIndex reused across versions
 
     # -- slot bitmap index -----------------------------------------------
     def slot_bitmap(self, predicate: Callable[[Request | None], bool]):
@@ -82,9 +88,14 @@ class ServeEngine:
         near_bm = from_positions(near, self.slots)
         idx = self._slot_base
         if idx is None:
+            # with a mesh, classify at word granularity so the slot universe
+            # splits into as many row shards as it has words, then shard it
             idx = BitmapIndex.from_columns(
-                {"occupied": occ_bm, "near_limit": near_bm}, r=self.slots
+                {"occupied": occ_bm, "near_limit": near_bm}, r=self.slots,
+                tile_words=1 if self.mesh is not None else 64,
             )
+            if self.mesh is not None:
+                idx = idx.shard(mesh=self.mesh)
         else:
             # indexes are immutable TileStore wrappers: swap only the masks
             # that actually moved, so a version bump that e.g. flips one
@@ -98,8 +109,13 @@ class ServeEngine:
         return idx
 
     def select_slots(self, query: Query) -> list[int]:
-        """Slot ids matching a query expression over the criteria columns."""
-        return to_positions_np(self.slot_index().execute(query)).tolist()
+        """Slot ids matching a query expression over the criteria columns.
+        Runs through the sharded engine when the engine holds a mesh (the
+        result is gathered only here, where positions leave the device)."""
+        out = self.slot_index().execute(query)
+        if hasattr(out, "gather"):  # ShardedResult
+            out = out.gather()
+        return to_positions_np(out).tolist()
 
     def free_slots(self) -> list[int]:
         return self.select_slots(Not(Col("occupied")))

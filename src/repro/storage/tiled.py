@@ -13,8 +13,13 @@ batched queries), using :meth:`Circuit.specialize`:
      work, zero HBM traffic;
   3. for the rest, gather ONLY the dirty tiles from the store's packed
      dirty array into one ``[n_dirty, m * tile_words]`` batch and dispatch
-     one fused Pallas call per signature group (compiled evaluators are
-     cached by circuit structure, so recurring signatures share kernels).
+     one fused Pallas call per *structurally distinct residual circuit* --
+     signatures whose residuals fold to the same gate DAG (for a bare
+     threshold, any two signatures with equal (T - #ones, #dirty)) are
+     merged into one launch, capping the signature explosion that made
+     cf=0.5 workloads dispatch one kernel per signature.  Compiled
+     evaluators are additionally cached by circuit structure, so recurring
+     residuals share kernels across queries and stores.
 
 The skipping decision is made before launch -- the TPU-legal realisation
 of EWAH's fast-forwarding, now for every backend that compiles to a
@@ -24,7 +29,13 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.circuits import CONST0, CONST1, Circuit
+from repro.core.circuits import (
+    CONST0,
+    CONST1,
+    _EXACT_CONST_MAX_INPUTS,
+    _truth_table_masks,
+    Circuit,
+)
 
 from .tilestore import TILE_ONE, TILE_ZERO, TileStore
 
@@ -37,17 +48,37 @@ _SPECIALIZE_MEMO: dict[tuple, tuple] = {}
 _SPECIALIZE_MEMO_CAP = 4096
 
 # beyond this many distinct signatures the data is effectively unclassifiable
-# at this granularity; the overflow tiles run the dense support circuit
-_MAX_SIGNATURES = 64
+# at this granularity; the overflow tiles run the dense support circuit.
+# Shared with the planner's cost model so plans price the same split the
+# executor actually runs.
+from repro.core.planner import _MAX_EXACT_SIGNATURES as _MAX_SIGNATURES
+
+
+def _residual_key(res: Circuit):
+    """Merge key for residual circuits: the exact truth table when the
+    support is small (two residuals compute the same function iff their
+    tables match -- stronger than structural identity, so e.g. every
+    bare-threshold signature with equal (T - #ones, #dirty) merges no
+    matter where the folded constants sat in the adder), else the
+    gate-order-independent Merkle key."""
+    if res.n_inputs <= _EXACT_CONST_MAX_INPUTS:
+        masks, zeros, ones = _truth_table_masks(res.n_inputs)
+        return (res.n_inputs, tuple(res.evaluate(masks, zeros, ones)))
+    return res.semantic_key()
 
 
 def _specialize(circuit: Circuit, ckey: tuple, sig_bytes: bytes, assign: dict):
+    """Memoised ``circuit.specialize`` + residual merge key.
+
+    Returns (const_outputs, residual, kept_inputs, residual_key|None).
+    """
     key = (ckey, sig_bytes)
     got = _SPECIALIZE_MEMO.get(key)
     if got is None:
         if len(_SPECIALIZE_MEMO) >= _SPECIALIZE_MEMO_CAP:
             _SPECIALIZE_MEMO.clear()
-        got = circuit.specialize(assign)
+        const, res, kept = circuit.specialize(assign)
+        got = (const, res, kept, None if res is None else _residual_key(res))
         _SPECIALIZE_MEMO[key] = got
     return got
 
@@ -89,6 +120,7 @@ def run_tiled_circuit(
         "n_tiles": n_tiles,
         "n_outputs": k,
         "signatures": 0,
+        "residual_signatures": 0,  # signatures needing a residual kernel
         "const_tiles": 0,  # tiles where EVERY output folded to a constant
         "case3_tiles": 0,
         "dirty_words_gathered": 0,
@@ -118,7 +150,14 @@ def run_tiled_circuit(
     order = np.argsort(-np.bincount(inverse, minlength=sigs.shape[0]))
     exact = set(order[:_MAX_SIGNATURES].tolist())
 
+    # Pass 1: specialize per signature, write the constant-folded tiles, and
+    # bucket the residual work by the residual circuit's STRUCTURE.  Distinct
+    # signatures routinely fold to the same gate DAG (a bare threshold only
+    # depends on (T - #ones, #dirty)), so merging them caps the launch count:
+    # one gather + one kernel per structurally distinct residual, not one per
+    # signature (the cf=0.5 regime went from 8 launches to ~3).
     overflow_tiles: list = []
+    merged: dict[tuple, list] = {}  # (residual key, live outputs) -> work
     for s_id in range(sigs.shape[0]):
         tiles = np.nonzero(inverse == s_id)[0]
         if s_id not in exact:
@@ -131,7 +170,7 @@ def run_tiled_circuit(
                 assign[col] = CONST0
             elif sig[j] == TILE_ONE:
                 assign[col] = CONST1
-        const, res, kept = _specialize(circuit, ckey, sig.tobytes(), assign)
+        const, res, kept, rkey = _specialize(circuit, ckey, sig.tobytes(), assign)
         for j, cval in enumerate(const):
             if cval is not None:
                 out[j, tiles] = 0xFFFFFFFF if cval else 0
@@ -139,8 +178,19 @@ def run_tiled_circuit(
             info["const_tiles"] += int(tiles.size)
             continue
         info["case3_tiles"] += int(tiles.size)
-        rows = store.dirty_index[kept][:, tiles]  # [d, m], all >= 0 by signature
-        gathered = store.dirty[rows.reshape(-1)].reshape(len(kept), -1)
+        info["residual_signatures"] += 1
+        live = tuple(j for j, cval in enumerate(const) if cval is None)
+        merged.setdefault((rkey, live), [res, []])[1].append((tiles, kept))
+
+    # Pass 2: one gather + one (structurally cached) kernel per merged group.
+    for (_rkey, live), (res, entries) in merged.items():
+        tiles = np.concatenate([t for t, _ in entries])
+        # residual input order follows each signature's kept-column order, so
+        # tiles from different signatures feed the same kernel wires
+        rows = np.concatenate(
+            [store.dirty_index[kept][:, t] for t, kept in entries], axis=1
+        )  # [d, m], all >= 0 by signature
+        gathered = store.dirty[rows.reshape(-1)].reshape(res.n_inputs, -1)
         info["dirty_words_gathered"] += int(gathered.size)
         info["launches"] += 1
         got = run_circuit_cached(
@@ -149,7 +199,6 @@ def run_tiled_circuit(
         got = np.asarray(jax.device_get(got), dtype=np.uint32)
         if got.ndim == 1:
             got = got[None]
-        live = [j for j, cval in enumerate(const) if cval is None]
         out[np.asarray(live)[:, None], tiles[None, :]] = got.reshape(
             len(live), tiles.size, tw
         )
@@ -160,7 +209,7 @@ def run_tiled_circuit(
         # specialised only on the non-support inputs
         assign = {i: CONST0 for i in range(store.n) if i not in support}
         sig_bytes = b"dense"
-        const, res, kept = _specialize(circuit, ckey, sig_bytes, assign)
+        const, res, kept, _rkey = _specialize(circuit, ckey, sig_bytes, assign)
         pad = n_tiles * tw - nw
         dense = np.asarray(jax.device_get(store.densify()), dtype=np.uint32)
         if pad:

@@ -80,6 +80,10 @@ class MemberStats:
     density: float  # mean member density
     dirty_words: int  # total words stored for the members' dirty tiles
     case3_tiles: int  # tiles where at least one member is dirty
+    #: distinct tile-class signatures over the subset, as
+    #: (tile_count, n_one, n_dirty) triples -- lets the planner price the
+    #: tiled executor's per-signature dispatch overhead without specializing
+    signatures: tuple = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -154,6 +158,10 @@ class TileStore:
         # bit-level metadata (RUN tags, runcounts): computed on first access
         self._refined_classes: np.ndarray | None = None
         self._col_stats: tuple | None = None
+        # member_stats memo: stores are immutable, so the aggregate (incl.
+        # the np.unique signature pass) per member subset never changes --
+        # planners hit this once per (shard, subset), not once per query
+        self._member_stats_cache: dict = {}
 
     def _assemble_dirty(self) -> None:
         if self._dirty_np_cache is not None:
@@ -239,6 +247,66 @@ class TileStore:
         if tile_words == self.tile_words:
             return self
         return TileStore.from_packed(self.densify(), tile_words=tile_words, r=self.r)
+
+    def slice_tiles(self, t0: int, t1: int) -> "TileStore":
+        """New store over the tile range [t0, t1) -- the row-space shard
+        constructor.  Classes and dirty words are sliced, never recomputed,
+        so carving S shards costs O(N * n_tiles) bookkeeping, not a
+        reclassification pass; each shard carries its own offsets table and
+        member statistics (built lazily like any other store)."""
+        t0, t1 = int(t0), int(t1)
+        if not 0 <= t0 < t1 <= self.n_tiles:
+            raise ValueError(f"tile range [{t0}, {t1}) outside [0, {self.n_tiles})")
+        tw = self.tile_words
+        w0 = t0 * tw
+        nw_local = min(self.n_words, t1 * tw) - w0
+        r_local = min(self.r, t1 * tw * 32) - w0 * 32
+        if r_local <= 0:
+            raise ValueError(f"tile range [{t0}, {t1}) holds no bits of the universe")
+        cols = []
+        for c in self._cols:
+            classes = np.ascontiguousarray(c.classes[t0:t1])
+            p0 = int((c.classes[:t0] >= TILE_DIRTY).sum())
+            nd = int((classes >= TILE_DIRTY).sum())
+            dirty = np.ascontiguousarray(c.dirty[p0 : p0 + nd])
+            card = _popcount_words(dirty) if dirty.size else 0
+            card += int((classes == TILE_ONE).sum()) * tw * 32
+            cols.append(_Column(classes=classes, dirty=dirty, cardinality=card))
+        dense = None
+        if self._dense is not None:
+            dense = self._dense[:, w0 : w0 + nw_local]
+        return TileStore(cols, tile_words=tw, n_words=nw_local, r=r_local,
+                         dense=dense)
+
+    @classmethod
+    def concat_tiles(cls, stores, *, n_words: int | None = None,
+                     r: int | None = None) -> "TileStore":
+        """Inverse of :meth:`slice_tiles`: stitch tile-range stores back
+        into one.  Classes and dirty words are concatenated per column --
+        nothing is reclassified, the shards already hold the answer."""
+        stores = list(stores)
+        first = stores[0]
+        tw = first.tile_words
+        if any(s.tile_words != tw or s.n != first.n for s in stores):
+            raise ValueError("stores must share tile_words and column count")
+        if n_words is None:
+            n_words = sum(s.n_words for s in stores)
+        if r is None:
+            r = sum(s.r for s in stores)
+        cols = []
+        for i in range(first.n):
+            parts = [s._cols[i] for s in stores]
+            cols.append(
+                _Column(
+                    classes=np.concatenate([p.classes for p in parts]),
+                    dirty=np.concatenate([p.dirty for p in parts]),
+                    cardinality=sum(p.cardinality for p in parts),
+                )
+            )
+        dense = None
+        if all(s._dense is not None for s in stores):
+            dense = jnp.concatenate([s._dense for s in stores], axis=1)
+        return cls(cols, tile_words=tw, n_words=n_words, r=r, dense=dense)
 
     # -- accessors ---------------------------------------------------------
     @property
@@ -338,14 +406,24 @@ class TileStore:
                           tile_words=self.tile_words, n_words=self.n_words)
 
     def member_stats(self, slots=None) -> MemberStats:
-        """Planner-facing aggregate over a member subset (default: all)."""
-        idx = np.arange(self.n) if slots is None else np.asarray(list(slots))
+        """Planner-facing aggregate over a member subset (default: all).
+        Cached per subset (the store is immutable)."""
+        key = None if slots is None else tuple(slots)
+        cached = self._member_stats_cache.get(key)
+        if cached is not None:
+            return cached
+        idx = np.arange(self.n) if slots is None else np.asarray(list(key))
         if idx.size == 0:
             return MemberStats(0, self.n_words, self.tile_words, 1.0, 0.0, 0, 0)
         cls = self._classes_word[idx]
         dirty_tiles = int((cls >= TILE_DIRTY).sum())
         dens = [self._cols[i].cardinality / max(self.r, 1) for i in idx]
-        return MemberStats(
+        sigs, counts = np.unique(cls.T, axis=0, return_counts=True)
+        signatures = tuple(
+            (int(cnt), int((sig == TILE_ONE).sum()), int((sig >= TILE_DIRTY).sum()))
+            for sig, cnt in zip(sigs, counts)
+        )
+        stats = MemberStats(
             n=int(idx.size),
             n_words=self.n_words,
             tile_words=self.tile_words,
@@ -353,4 +431,7 @@ class TileStore:
             density=float(np.mean(dens)),
             dirty_words=dirty_tiles * self.tile_words,
             case3_tiles=int(((cls >= TILE_DIRTY).any(axis=0)).sum()),
+            signatures=signatures,
         )
+        self._member_stats_cache[key] = stats
+        return stats

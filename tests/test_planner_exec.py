@@ -118,6 +118,51 @@ def test_planner_emits_tiled_fused_on_clean_data():
     assert idx.last_info["dirty_words_gathered"] < idx.n * idx.n_words
 
 
+def test_planner_prices_signature_dispatch_overhead():
+    """Regression (BENCH_query.json): tiled_fused was 5-16x slower on wall
+    time than fused at clean_fraction <= 0.5 despite touching fewer words,
+    because every specialization signature was a separate launch.  The cost
+    model now prices launch groups, so the planner must NOT pick tiled_fused
+    at cf=0.0 / cf=0.5 and must still pick it on clean-dominated data."""
+    from repro.query import BitmapIndex
+
+    n, n_tiles = 8, 8
+    for cf, expect_tiled in ((0.0, False), (0.5, False), (0.95, True)):
+        bits = _bench_clean_fraction_bits(n, n_tiles, cf, seed=int(cf * 100) + 1)
+        idx = BitmapIndex.from_dense(jnp.asarray(bits))
+        plan = idx.explain(Threshold(n // 2))
+        if expect_tiled:
+            assert plan.algorithm == "tiled_fused", (cf, plan)
+        else:
+            assert plan.algorithm != "tiled_fused", (cf, plan)
+            # with the fused kernel available the dense sweep must win
+            stats = idx.store.member_stats(None)
+            from repro.core.planner import plan_threshold
+
+            p = plan_threshold(n, n // 2, stats=stats, fused_available=True)
+            assert p.algorithm == "fused", (cf, p)
+        # the estimate includes per-launch overhead: visible in candidates
+        cands = dict(plan.candidates)
+        assert "tiled_fused" in cands
+
+
+def _bench_clean_fraction_bits(n, n_tiles, clean_fraction, seed=0, span=64 * 32):
+    """The query_bench generator (duplicated: benchmarks/ is not a package)."""
+    rng = np.random.default_rng(seed)
+    bits = np.zeros((n, n_tiles * span), bool)
+    for i in range(n):
+        for tj in range(n_tiles):
+            u = rng.random()
+            lo, hi = tj * span, (tj + 1) * span
+            if u < clean_fraction / 2:
+                pass
+            elif u < clean_fraction:
+                bits[i, lo:hi] = True
+            else:
+                bits[i, lo:hi] = rng.random(span) < 0.35
+    return bits
+
+
 def test_plan_query_names_resolve():
     """plan_query outputs execute directly through the query layer."""
     bits, bm = _mk(10, 300, 0.3, seed=9)
