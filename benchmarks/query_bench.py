@@ -63,13 +63,18 @@ def _clean_fraction_bits(n, n_tiles, clean_fraction, seed=0, span=64 * 32):
 
 
 def clean_fraction_sweep(smoke: bool = False) -> list:
-    """Dense fused vs tiled_fused: wall time + words touched per backend."""
+    """Dense fused vs tiled_fused: wall time + words touched per backend,
+    PLUS the plan the cost model actually picks at each point -- the sweep
+    otherwise cannot show whether the launch-overhead pricing steers
+    production away from tiled_fused in the regimes where it loses on wall
+    time (e.g. 3868us vs 80us fused at cf=0.5 in smoke data)."""
     n, n_tiles = (8, 8) if smoke else (16, 48)
     sweep = []
     for cf in CLEAN_FRACTIONS:
         bits = _clean_fraction_bits(n, n_tiles, cf, seed=int(cf * 100) + 1)
         idx = BitmapIndex.from_dense(jnp.asarray(bits))
         q = Threshold(n // 2)
+        plan = idx.explain(q)  # what production would run at this point
         dense_words = idx.n * idx.n_words + idx.n_words  # N reads + 1 write
         t_fused = _time(
             lambda: idx.execute(q, backend="fused").block_until_ready()
@@ -82,6 +87,11 @@ def clean_fraction_sweep(smoke: bool = False) -> list:
                 "clean_fraction": cf,
                 "n": n,
                 "n_words": idx.n_words,
+                "planned": {
+                    "algorithm": plan.algorithm,
+                    "cost_words": plan.cost,
+                    "candidates": [[b, c] for b, c in plan.candidates],
+                },
                 "backends": {
                     "fused": {
                         "wall_us": t_fused * 1e6,
@@ -214,6 +224,15 @@ def run(smoke: bool = False, sweep: list | None = None):
         )
         out.append((f"query_cf{cf}_fused_us", fused["wall_us"], ""))
         out.append((f"query_cf{cf}_tiled_us", tiled["wall_us"], ""))
+        planned = row.get("planned")
+        if planned:
+            out.append(
+                (
+                    f"query_cf{cf}_planned_cost",
+                    planned["cost_words"] or 0.0,
+                    f"planner picks {planned['algorithm']}",
+                )
+            )
     return out
 
 
@@ -245,7 +264,8 @@ if __name__ == "__main__":
         be = row["backends"]
         print(
             f"cf={row['clean_fraction']}: fused {be['fused']['words_touched']} words, "
-            f"tiled {be['tiled_fused']['words_touched']} words"
+            f"tiled {be['tiled_fused']['words_touched']} words, "
+            f"planner -> {row['planned']['algorithm']}"
         )
     for row in shards:
         print(

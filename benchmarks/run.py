@@ -10,6 +10,8 @@ Prints ``name,value,derived`` CSV lines.  Sections:
   kernel   -- fused Pallas kernel traffic model + jnp wall-times
   query    -- unified query API: composed-circuit vs leafwise, batching,
               compiled-circuit cache (repro.query)
+  stream   -- streaming update engine: delta apply + view refresh vs full
+              rebuild, compaction amortization (repro.stream; smoke sizes)
   roofline -- three-term roofline per dry-run cell (deliverable g; requires
               artifacts/dryrun from ``python -m repro.launch.dryrun``)
 """
@@ -20,7 +22,7 @@ import traceback
 
 
 def main() -> None:
-    sections = sys.argv[1:] or ["table5", "table7", "fig3", "table10", "heatmap", "kernel", "weighted", "query", "roofline"]
+    sections = sys.argv[1:] or ["table5", "table7", "fig3", "table10", "heatmap", "kernel", "weighted", "query", "stream", "roofline"]
     failures = 0
     for section in sections:
         print(f"# --- {section} ---")
@@ -57,6 +59,10 @@ def main() -> None:
                 from benchmarks import query_bench as mod
 
                 rows = mod.run()
+            elif section == "stream":
+                from benchmarks import stream_bench as mod
+
+                rows = mod.run(smoke=True)
             elif section == "roofline":
                 from benchmarks import roofline as mod
 

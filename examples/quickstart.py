@@ -81,3 +81,33 @@ assert (np.asarray(unpack(mid, idx.r)) == ((counts >= 2) & (counts <= 10))).all(
 assert (np.asarray(unpack(hot, idx.r)) == (counts >= 2)).all()
 assert (np.asarray(unpack(promo, idx.r)) == ((counts >= 2) & on_sale[0])).all()
 print("verified against position counts - OK")
+
+# -- streaming updates: no rebuilds -----------------------------------------
+# the index so far is frozen at build time; production sees sustained
+# writes.  StreamingIndex absorbs them as tile deltas and keeps registered
+# query results fresh incrementally (repro.stream)
+from repro.query import BitmapIndex
+from repro.stream import StreamingIndex
+
+stream = StreamingIndex(
+    BitmapIndex.from_dense(
+        jnp.asarray(on_sale), names=[f"store{i}" for i in range(N_STORES)]
+    )
+)
+stream.materialize("mid", Interval(2, 10))  # the abstract's query, maintained
+before = stream.count("mid")
+
+# pick a product on sale in exactly 1 store; ONE store putting it on sale
+# moves it into the "2 to 10 stores" band -- the materialized result flips
+# without a rebuild, by re-running the circuit over ONE tile
+product = int(np.nonzero(counts == 1)[0][0])
+store = next(f"store{i}" for i in range(N_STORES) if not on_sale[i, product])
+stream.set_bits(store, [product])
+after = stream.count("mid")  # incrementally-maintained count: O(1) read
+info = stream.view_info("mid")
+print(f"product {product} goes on sale in {store}: "
+      f"'in 2..10 stores' {before} -> {after} "
+      f"({info['tiles_refreshed']} tile refreshed, "
+      f"{info['words_touched']} words touched, 0 rebuilds)")
+assert after == before + 1
+assert stream.delta_stats()["compactions"] == 0  # pure delta, base untouched

@@ -190,6 +190,29 @@ class ShardedTileStore:
         """Per-shard planner statistics of a member subset."""
         return tuple(s.member_stats(slots) for s in self.shards)
 
+    def with_shards(self, shards) -> "ShardedTileStore":
+        """New sharded store with the shard stores swapped out -- the
+        streaming engine's per-shard overlay/compaction constructor
+        (``repro.stream``).  Accepts TileStore-shaped objects (e.g.
+        ``OverlayStore`` read views); tile bounds are recomputed from the
+        shards' own sizes, so growth in the LAST shard (``append_rows``
+        extending the universe) is reflected without resharding.  Interior
+        shards hold only whole tiles, so their boundaries cannot move."""
+        shards = tuple(shards)
+        if len(shards) != self.n_shards:
+            raise ValueError(f"{len(shards)} shards for {self.n_shards}")
+        bounds, t0 = [], 0
+        for s in shards:
+            bounds.append((t0, t0 + s.n_tiles))
+            t0 = bounds[-1][1]
+        off_words = bounds[-1][0] * self.tile_words
+        return ShardedTileStore(
+            shards, bounds,
+            n_words=off_words + shards[-1].n_words,
+            r=off_words * 32 + shards[-1].r,
+            mesh=self.mesh, axis=self.axis,
+        )
+
     # -- immutable updates -------------------------------------------------
     def split(self, packed) -> tuple:
         """Split a global packed row uint32[n_words] into per-shard parts."""

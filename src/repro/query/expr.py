@@ -36,6 +36,7 @@ __all__ = [
     "Not",
     "AndNot",
     "as_query",
+    "bind_members",
 ]
 
 
@@ -291,3 +292,50 @@ class AndNot(Query):
 
     def key(self) -> tuple:
         return ("andnot", self.keep.key(), self.drop.key())
+
+
+def bind_members(q: Query, names) -> Query:
+    """Resolve every implicit ``over=None`` member set to the explicit
+    column tuple ``names``, recursively.
+
+    ``over=None`` means "every column of the index at execution time" --
+    correct for ad-hoc queries, wrong for a *registered* one: a streaming
+    materialized view must keep meaning what it meant when registered,
+    even after new (view) columns join the schema.  Explicit member sets
+    pass through untouched.
+    """
+    cols = tuple(Col(str(x)) for x in names)
+
+    def bind(x: Query) -> Query:
+        if isinstance(x, _SymmetricLeaf):
+            over = cols if x.over is None else tuple(bind(m) for m in x.over)
+            if isinstance(x, Threshold):
+                return Threshold(x.t, over)
+            if isinstance(x, Interval):
+                return Interval(x.lo, x.hi, over)
+            if isinstance(x, Exactly):
+                return Exactly(x.k, over)
+            if isinstance(x, Parity):
+                return Parity(over)
+            if isinstance(x, Majority):
+                return Majority(over)
+            if isinstance(x, Sym):
+                return Sym(x.table, over)
+            raise TypeError(f"unknown symmetric leaf {type(x).__name__}")
+        if isinstance(x, Weighted):
+            over = cols if x.over is None else tuple(bind(m) for m in x.over)
+            return Weighted(x.weights, x.t, over)
+        if isinstance(x, And):
+            return And(*(bind(c) for c in x.children))
+        if isinstance(x, Or):
+            return Or(*(bind(c) for c in x.children))
+        if isinstance(x, Not):
+            return Not(bind(x.child))
+        if isinstance(x, AndNot):
+            return AndNot(bind(x.keep), bind(x.drop))
+        return x  # Col
+
+    return bind(as_query(q))
+
+
+

@@ -1,11 +1,18 @@
 """Batched serving engine: continuous batching over a fixed slot pool.
 
-Slot state is tracked as a *bitmap index* (one criteria column per
-predicate over slot positions) and slot-selection queries (free slots,
-slots near the length limit, admission picks) are query expressions
-executed through ``repro.query`` -- the serving layer is a natural
-bitmap-index consumer (requests x predicates), and composed selections
-like "occupied AND NOT near the limit" stay single fused queries.
+Slot state is tracked as a *streaming bitmap index* (one criteria column
+per predicate over slot positions) and slot-selection queries (free
+slots, slots near the length limit, admission picks) are query
+expressions executed through ``repro.query`` -- the serving layer is a
+natural bitmap-index consumer (requests x predicates), and composed
+selections like "occupied AND NOT near the limit" stay single fused
+queries.
+
+Slot-state maintenance goes through ``repro.stream.StreamingIndex``: all
+slot changes of one decode step (completions freeing slots, positions
+crossing the near-limit margin) coalesce into a SINGLE batched delta
+apply -- one ``_slot_version`` bump per step, never one column
+reclassification per event.
 
 The device-side decode is the jitted ``decode_step`` from the model zoo;
 prefill uses ``forward(mode='prefill')``.  Greedy sampling by default.
@@ -25,6 +32,7 @@ from repro.core.bitmaps import from_positions, to_positions_np
 from repro.models import decode_step, forward, init_cache
 from repro.models.model import logits_from_hidden
 from repro.query import And, BitmapIndex, Col, Not, Query
+from repro.stream import StreamingIndex
 
 
 @dataclasses.dataclass
@@ -54,9 +62,11 @@ class ServeEngine:
         self.pos = np.zeros(batch_slots, np.int64)
         self._decode = jax.jit(partial(decode_step, cfg=cfg))
         self.step_count = 0
-        self._slot_version = 0  # bumped whenever slot occupancy/positions move
-        self._slot_cache: dict = {}
-        self._slot_base = None  # (Sharded)BitmapIndex reused across versions
+        self._slot_version = 0  # bumped ONCE per submit / step that moved state
+        self._near_margin = 8
+        self._slot_stream: StreamingIndex | None = None
+        self._occ_now: set = set()  # mirror of the index's occupied column
+        self._near_now: set = set()  # mirror of the index's near_limit column
 
     # -- slot bitmap index -----------------------------------------------
     def slot_bitmap(self, predicate: Callable[[Request | None], bool]):
@@ -64,49 +74,72 @@ class ServeEngine:
         idx = [i for i, r in enumerate(self.requests) if predicate(r)]
         return from_positions(idx, self.slots)
 
-    def slot_index(self, near_limit_margin: int = 8) -> BitmapIndex:
-        """Criteria columns over slot positions, ready for query expressions:
-        ``occupied`` (a request holds the slot) and ``near_limit`` (its
-        position is within ``near_limit_margin`` of the sequence cap).
-
-        Cached per engine state version -- ``free_slots()`` sits in the
-        admission inner loop, so rebuilding the index (and re-running its
-        queries) only happens after a submit or decode step changed state.
-        """
-        key = (self._slot_version, near_limit_margin)
-        cached = self._slot_cache.get(key)
-        if cached is not None:
-            return cached
+    def _slot_state(self, margin: int) -> tuple:
         occ, near = [], []
         for i, r in enumerate(self.requests):
             if r is None:
                 continue
             occ.append(i)
-            if self.pos[i] >= self.max_seq - near_limit_margin:
+            if self.pos[i] >= self.max_seq - margin:
                 near.append(i)
-        occ_bm = from_positions(occ, self.slots)
-        near_bm = from_positions(near, self.slots)
-        idx = self._slot_base
-        if idx is None:
-            # with a mesh, classify at word granularity so the slot universe
-            # splits into as many row shards as it has words, then shard it
-            idx = BitmapIndex.from_columns(
-                {"occupied": occ_bm, "near_limit": near_bm}, r=self.slots,
-                tile_words=1 if self.mesh is not None else 64,
-            )
-            if self.mesh is not None:
-                idx = idx.shard(mesh=self.mesh)
-        else:
-            # indexes are immutable TileStore wrappers: swap only the masks
-            # that actually moved, so a version bump that e.g. flips one
-            # occupancy bit reclassifies one column and leaves the other's
-            # tiles (and the shared dirty storage) untouched
-            for name, bm in (("occupied", occ_bm), ("near_limit", near_bm)):
-                if not np.array_equal(np.asarray(idx.column(name)), np.asarray(bm)):
-                    idx = idx.replace_column(name, bm)
-        self._slot_base = idx
-        self._slot_cache = {key: idx}
+        return occ, near
+
+    def _build_slot_index(self, occ, near):
+        # with a mesh, classify at word granularity so the slot universe
+        # splits into as many row shards as it has words, then shard it
+        idx = BitmapIndex.from_columns(
+            {
+                "occupied": from_positions(occ, self.slots),
+                "near_limit": from_positions(near, self.slots),
+            },
+            r=self.slots,
+            tile_words=1 if self.mesh is not None else 64,
+        )
+        if self.mesh is not None:
+            idx = idx.shard(mesh=self.mesh)
         return idx
+
+    def slot_index(self, near_limit_margin: int = 8):
+        """Criteria columns over slot positions, ready for query expressions:
+        ``occupied`` (a request holds the slot) and ``near_limit`` (its
+        position is within ``near_limit_margin`` of the sequence cap).
+
+        The default-margin index is a :class:`repro.stream.StreamingIndex`
+        maintained by batched delta applies (one per submit / step) -- the
+        slot columns are never reclassified column-wide, and under a mesh
+        each delta routes to the owning row shard.  A non-default margin
+        builds a transient index from the current state.
+        """
+        if near_limit_margin != self._near_margin:
+            return self._build_slot_index(*self._slot_state(near_limit_margin))
+        if self._slot_stream is None:
+            occ, near = self._slot_state(self._near_margin)
+            self._slot_stream = StreamingIndex(self._build_slot_index(occ, near))
+            self._occ_now, self._near_now = set(occ), set(near)
+        return self._slot_stream.index()
+
+    def _commit_slot_state(self) -> None:
+        """Fold EVERY slot change since the last commit -- completions,
+        admissions, positions crossing the margin -- into one batched index
+        update.  One call per submit / step; bumps ``_slot_version`` once."""
+        self._slot_version += 1
+        if self._slot_stream is None:
+            return  # index not built yet; first slot_index() reads fresh state
+        occ, near = self._slot_state(self._near_margin)
+        occ, near = set(occ), set(near)
+        sets: dict = {}
+        clears: dict = {}
+        for name, want, have in (
+            ("occupied", occ, self._occ_now),
+            ("near_limit", near, self._near_now),
+        ):
+            if want - have:
+                sets[name] = sorted(want - have)
+            if have - want:
+                clears[name] = sorted(have - want)
+        if sets or clears:
+            self._slot_stream.update(sets=sets, clears=clears)
+        self._occ_now, self._near_now = occ, near
 
     def select_slots(self, query: Query) -> list[int]:
         """Slot ids matching a query expression over the criteria columns.
@@ -141,7 +174,7 @@ class ServeEngine:
             lambda full, new: full.at[:, slot : slot + 1].set(new), self.cache, caches
         )
         self.pos[slot] = len(req.prompt)
-        self._slot_version += 1
+        self._commit_slot_state()
         return True
 
     # -- decode ------------------------------------------------------------
@@ -170,7 +203,10 @@ class ServeEngine:
                 r.done = True
                 self.requests[i] = None  # release slot
         self.step_count += 1
-        self._slot_version += 1
+        # every slot change this step -- completions releasing slots and
+        # positions crossing the near-limit margin -- lands as ONE batched
+        # delta apply on the streaming slot index
+        self._commit_slot_state()
         return emitted
 
     def run_until_drained(self, pending: list[Request], max_steps: int = 10_000):

@@ -37,7 +37,7 @@ from repro.core.circuits import (
     Circuit,
 )
 
-from .tilestore import TILE_ONE, TILE_ZERO, TileStore
+from .tilestore import TILE_ONE, TILE_ZERO, TileStore, _signature_counts
 
 __all__ = ["run_tiled_circuit"]
 
@@ -90,6 +90,7 @@ def run_tiled_circuit(
     block_words: int | None = None,
     interpret: bool | None = None,
     pallas: bool = True,
+    tiles=None,
 ):
     """Evaluate ``circuit`` over the store's columns with tile skipping.
 
@@ -97,6 +98,16 @@ def run_tiled_circuit(
     circuit, uint32[k, n_words] otherwise; ``info`` reports the realised
     3-case split and the words actually gathered (the paper's Table 4
     work-skipped accounting, generalised).
+
+    ``tiles`` restricts evaluation (and its signature specialisation /
+    launch merging) to a subset of tile indices -- incremental maintenance
+    work that re-runs a circuit only where inputs changed.  With it,
+    ``out`` is a host ``uint32[k, len(tiles), tile_words]`` array (per
+    selected tile, no tail clipping -- callers mask the partial final
+    tile) and ``info["dirty_words_gathered"]`` counts only the restricted
+    gather.  (``repro.stream``'s view refresh uses a leaner direct path --
+    one support-residual circuit, no per-signature split -- because its
+    pending tiles are typically uniformly dirty.)
     """
     import jax
 
@@ -115,9 +126,19 @@ def run_tiled_circuit(
     support = circuit.support()
     ckey = circuit_structural_key(circuit)
 
-    out = np.zeros((k, n_tiles, tw), dtype=np.uint32)
+    restricted = tiles is not None
+    sel = None
+    if restricted:
+        sel = np.asarray(tiles, dtype=np.int64)
+        if sel.ndim != 1 or (sel.size and not
+                             ((0 <= sel) & (sel < n_tiles)).all()):
+            raise ValueError(f"tiles must be 1-D indices in [0, {n_tiles})")
+    n_sel = int(sel.size) if restricted else n_tiles
+
+    out = np.zeros((k, n_sel, tw), dtype=np.uint32)
     info = {
         "n_tiles": n_tiles,
+        "selected_tiles": n_sel,
         "n_outputs": k,
         "signatures": 0,
         "residual_signatures": 0,  # signatures needing a residual kernel
@@ -128,21 +149,31 @@ def run_tiled_circuit(
         "launches": 0,
     }
 
+    def _finish():
+        info["work_fraction"] = info["dirty_words_gathered"] / max(
+            1, info["total_words"]
+        )
+        if restricted:
+            return out, info  # host [k, n_sel, tw], caller patches per tile
+        result = out.reshape(k, -1)[:, :nw]
+        return jax.numpy.asarray(result[0] if k == 1 else result), info
+
     if not support:
         # constant circuit: no data touched at all
         const, _res, _kept = circuit.specialize({})
         for j, cval in enumerate(const):
             out[j] = 0xFFFFFFFF if cval else 0
-        info["const_tiles"] = n_tiles
-        result = out.reshape(k, -1)[:, :nw]
-        info["work_fraction"] = 0.0
-        ret = jax.numpy.asarray(result[0] if k == 1 else result)
-        return ret, info
+        info["const_tiles"] = n_sel
+        return _finish()
 
     # word-level signature per tile over the support (RUN counts as dirty:
-    # its words need bit work whenever the tile participates at all)
+    # its words need bit work whenever the tile participates at all).  Under
+    # a tile restriction, "tile" arrays below index positions within ``sel``
+    # (the output buffer); ``sel`` maps them back to store tile ids.
     cls = store.classes_word[support]  # [s, n_tiles], ZERO/ONE/DIRTY
-    sigs, inverse = np.unique(cls.T, axis=0, return_inverse=True)
+    if restricted:
+        cls = cls[:, sel]
+    sigs, inverse = _signature_counts(cls, return_inverse=True)
     info["signatures"] = int(sigs.shape[0])
 
     # most-populous signatures get exact specialisation; overflow tiles run
@@ -188,7 +219,8 @@ def run_tiled_circuit(
         # residual input order follows each signature's kept-column order, so
         # tiles from different signatures feed the same kernel wires
         rows = np.concatenate(
-            [store.dirty_index[kept][:, t] for t, kept in entries], axis=1
+            [store.dirty_index[kept][:, sel[t] if restricted else t]
+             for t, kept in entries], axis=1
         )  # [d, m], all >= 0 by signature
         gathered = store.dirty[rows.reshape(-1)].reshape(res.n_inputs, -1)
         info["dirty_words_gathered"] += int(gathered.size)
@@ -220,7 +252,8 @@ def run_tiled_circuit(
                 out[j, tiles] = 0xFFFFFFFF if cval else 0
         if res is not None:
             info["case3_tiles"] += int(tiles.size)
-            gathered = dense[np.asarray(kept)[:, None], tiles[None, :]].reshape(
+            gtiles = sel[tiles] if restricted else tiles
+            gathered = dense[np.asarray(kept)[:, None], gtiles[None, :]].reshape(
                 len(kept), -1
             )
             info["dirty_words_gathered"] += int(gathered.size)
@@ -239,7 +272,4 @@ def run_tiled_circuit(
         else:
             info["const_tiles"] += int(tiles.size)
 
-    info["work_fraction"] = info["dirty_words_gathered"] / max(1, info["total_words"])
-    result = out.reshape(k, -1)[:, :nw]
-    ret = jax.numpy.asarray(result[0] if k == 1 else result)
-    return ret, info
+    return _finish()

@@ -48,6 +48,25 @@ __all__ = [
 
 TILE_ZERO, TILE_ONE, TILE_DIRTY, TILE_RUN = 0, 1, 2, 3
 
+def _signature_counts(cls: np.ndarray, *, return_inverse: bool = False):
+    """Distinct per-tile class signatures of ``cls`` ([members, n_tiles]).
+
+    Returns ``(signatures, counts)`` -- or ``(signatures, inverse)`` with
+    ``return_inverse`` (the tiled executor's grouping).  Equivalent to
+    ``np.unique(cls.T, axis=0)`` but via a void view over contiguous rows
+    -- axis-unique's lexsort of object rows dominated planner and dispatch
+    time on multi-thousand-tile stores."""
+    rows = np.ascontiguousarray(cls.T)
+    if rows.size == 0:
+        return rows, np.zeros(0, np.int64)
+    v = rows.view(np.dtype((np.void, rows.shape[1]))).ravel()
+    uniq, second = np.unique(
+        v, return_inverse=return_inverse, return_counts=not return_inverse
+    )
+    sigs = uniq.view(np.uint8).reshape(uniq.size, rows.shape[1])
+    return sigs, second
+
+
 if hasattr(np, "bitwise_count"):  # numpy >= 2.0
     def _popcount_words(row: np.ndarray) -> int:
         return int(np.bitwise_count(row).sum())
@@ -118,6 +137,15 @@ def _classify_column(row: np.ndarray, tile_words: int) -> _Column:
         dirty=np.ascontiguousarray(dirty),
         cardinality=_popcount_words(row),
     )
+
+
+def _classify_tile_words(words: np.ndarray) -> int:
+    """Word-level class of one tile's words (ZERO / ONE / DIRTY)."""
+    if not words.any():
+        return TILE_ZERO
+    if (words == 0xFFFFFFFF).all():
+        return TILE_ONE
+    return TILE_DIRTY
 
 
 def _bit_stats(row: np.ndarray, classes: np.ndarray, tile_words: int, r: int):
@@ -241,6 +269,76 @@ class TileStore:
             dense = self._dense.at[int(i)].set(jnp.asarray(packed_row, WORD_DTYPE))
         return TileStore(cols, tile_words=self.tile_words, n_words=self.n_words,
                          r=self.r, dense=dense)
+
+    def apply_tile_updates(self, updates: dict, *, r: int | None = None
+                           ) -> "TileStore":
+        """New store with individual tiles' words swapped -- the streaming
+        compaction path (``repro.stream``).
+
+        ``updates`` maps column slot -> {tile index -> uint32[tile_words]}
+        (the tile's full new words, padding bits zero).  Only the touched
+        tiles are reclassified and only the touched columns' dirty packs are
+        respliced; untouched columns share their ``_Column`` (classes, dirty
+        rows, stats) with this store, so the cost is O(touched columns'
+        dirty rows), never a column- or store-wide reclassification like
+        :meth:`replace` / :meth:`from_packed`.  Per-column cardinality is
+        maintained by popcount deltas of the swapped tiles.
+
+        ``r`` may *grow* the universe (``repro.stream``'s ``append_rows``):
+        new tiles default to all-zero for every column, so only columns with
+        set bits in the appended region need entries in ``updates``.
+        """
+        r_new = int(r) if r is not None else self.r
+        if r_new < self.r:
+            raise ValueError(f"universe cannot shrink ({self.r} -> {r_new})")
+        nw_new = n_words_for(r_new)
+        tw = self.tile_words
+        n_tiles_new = (nw_new + tw - 1) // tw
+        growth = n_tiles_new - self.n_tiles
+        cols = []
+        for i, old in enumerate(self._cols):
+            upd = updates.get(i)
+            if not upd and not growth:
+                cols.append(old)  # shares classes/dirty/stats, immutable
+                continue
+            classes = np.concatenate(
+                [old.classes, np.zeros(growth, np.uint8)]
+            ) if growth else old.classes.copy()
+            card = old.cardinality
+            if upd:
+                # position of each old tile's row in the old dirty pack
+                old_pos = np.cumsum(old.classes >= TILE_DIRTY) - 1
+                for t, words in upd.items():
+                    t = int(t)
+                    if not 0 <= t < n_tiles_new:
+                        raise ValueError(f"tile {t} outside [0, {n_tiles_new})")
+                    words = np.ascontiguousarray(words, dtype=np.uint32)
+                    if words.shape != (tw,):
+                        raise ValueError(
+                            f"tile update must be uint32[{tw}], got {words.shape}"
+                        )
+                    card += _popcount_words(words)
+                    if t < self.n_tiles:
+                        oc = old.classes[t]
+                        if oc == TILE_ONE:
+                            card -= tw * 32
+                        elif oc >= TILE_DIRTY:
+                            card -= _popcount_words(old.dirty[old_pos[t]])
+                    classes[t] = _classify_tile_words(words)
+                dirty_t = np.nonzero(classes >= TILE_DIRTY)[0]
+                dirty = np.empty((dirty_t.size, tw), np.uint32)
+                is_upd = np.zeros(n_tiles_new, bool)
+                is_upd[np.fromiter(upd, np.int64, len(upd))] = True
+                from_base = ~is_upd[dirty_t]
+                if from_base.any():
+                    dirty[from_base] = old.dirty[old_pos[dirty_t[from_base]]]
+                for t in dirty_t[~from_base].tolist():
+                    dirty[np.searchsorted(dirty_t, t)] = upd[t]
+                cols.append(_Column(classes=classes, dirty=dirty, cardinality=card))
+            else:
+                cols.append(_Column(classes=classes, dirty=old.dirty, cardinality=card))
+        # dense view: dropped, rebuilt lazily from tiles on first densify()
+        return TileStore(cols, tile_words=tw, n_words=nw_new, r=r_new)
 
     def with_tile_words(self, tile_words: int) -> "TileStore":
         """Reclassify the whole store at a different tile granularity."""
@@ -418,7 +516,7 @@ class TileStore:
         cls = self._classes_word[idx]
         dirty_tiles = int((cls >= TILE_DIRTY).sum())
         dens = [self._cols[i].cardinality / max(self.r, 1) for i in idx]
-        sigs, counts = np.unique(cls.T, axis=0, return_counts=True)
+        sigs, counts = _signature_counts(cls)
         signatures = tuple(
             (int(cnt), int((sig == TILE_ONE).sum()), int((sig >= TILE_DIRTY).sum()))
             for sig, cnt in zip(sigs, counts)

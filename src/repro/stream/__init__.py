@@ -1,0 +1,29 @@
+"""`repro.stream`: the streaming update engine.
+
+Makes the bitmap index updatable without rebuilds and keeps registered
+query results fresh incrementally:
+
+  * :class:`DeltaStore` -- sparse per-column set/clear tile buffers plus
+    row-space ``append_rows``, overlaid on an immutable base
+    :class:`~repro.storage.TileStore`;
+  * :class:`~repro.stream.overlay.OverlayStore` -- the TileStore-shaped
+    read view every executor backend answers ``base ⊕ delta`` through;
+  * :class:`StreamingIndex` -- mutation API, planner-driven overlay
+    queries, tile-granular compaction (:class:`CompactionPolicy`,
+    ``TileStore.apply_tile_updates``) and materialized views refreshed
+    only over mutated tiles;
+  * sharded bases route every mutation to the owning row shard and
+    compact per shard -- nothing gathers.
+"""
+
+from .delta import DeltaStore
+from .index import CompactionPolicy, MaterializedView, StreamingIndex
+from .overlay import OverlayStore
+
+__all__ = [
+    "DeltaStore",
+    "OverlayStore",
+    "StreamingIndex",
+    "CompactionPolicy",
+    "MaterializedView",
+]

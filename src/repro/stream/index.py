@@ -1,0 +1,557 @@
+"""`StreamingIndex`: an updatable bitmap index with incrementally-maintained
+query results.
+
+The paper's headline property -- a threshold/symmetric result *is again a
+bitmap which can be further processed within a bitmap index* -- only pays
+off in a serving system if the index absorbs writes without rebuilds.
+``StreamingIndex`` wraps an immutable :class:`~repro.query.BitmapIndex`
+(or a :class:`~repro.dist.query.ShardedBitmapIndex`) and adds:
+
+  * **mutations**: ``set_bits`` / ``clear_bits`` / batched ``update`` /
+    row-space ``append_rows`` accumulate in per-shard
+    :class:`~repro.stream.delta.DeltaStore` buffers -- the base store is
+    never touched, so every stale reference keeps working;
+  * **overlay reads**: queries run against an
+    :class:`~repro.stream.overlay.OverlayStore` view, so every planner
+    backend answers ``base ⊕ delta`` bit-identically to a from-scratch
+    rebuild (the oracle property ``tests/test_stream.py`` enforces for
+    every ``ALGORITHMS`` entry);
+  * **tile-granular compaction**: :meth:`compact` folds the delta into a
+    new base via ``TileStore.apply_tile_updates`` -- only touched tiles
+    reclassify, cardinality moves by popcount deltas -- auto-triggered by
+    a :class:`CompactionPolicy` size/ratio threshold;
+  * **materialized views**: :meth:`materialize` registers a query whose
+    result lives as a real index column, refreshed by re-running its
+    support-specialised compiled circuit (``circuit_for`` +
+    ``Circuit.specialize``, both process-cached) ONLY over tiles whose
+    input columns changed, with counts maintained by per-tile popcount
+    deltas.  ``view_info(name)["words_touched"]`` reports the refresh
+    work, asserted in tests to scale with the mutation, not the universe.
+
+Under a sharded base, every mutation routes to the owning row shard's
+delta, refresh and compaction run per shard, and nothing ever gathers.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.bitmaps import cardinality
+from repro.query.expr import Col, Query, as_query, bind_members
+from repro.query.index import BitmapIndex, circuit_for
+
+from .delta import DeltaStore, base_tile_batch
+from .overlay import OverlayStore
+
+__all__ = ["CompactionPolicy", "MaterializedView", "StreamingIndex"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CompactionPolicy:
+    """When :meth:`StreamingIndex.compact` fires automatically.
+
+    The delta is folded into the base once its buffered words exceed
+    ``max(min_delta_words, max_delta_ratio * base_working_set)`` where the
+    base working set is the base store's dirty words plus one output pass
+    -- i.e. compaction triggers when overlay bookkeeping starts to rival
+    the work a query actually does.  ``auto=False`` leaves compaction
+    fully manual.
+    """
+
+    min_delta_words: int = 4096
+    max_delta_ratio: float = 0.25
+    auto: bool = True
+
+    def should_compact(self, delta_words: int, base_words: int) -> bool:
+        if delta_words <= 0:
+            return False
+        return delta_words >= max(
+            self.min_delta_words, self.max_delta_ratio * base_words
+        )
+
+
+@dataclasses.dataclass
+class MaterializedView:
+    """A registered query kept fresh as a real index column."""
+
+    name: str
+    query: Query
+    slot: int
+    support: frozenset  # column slots the compiled circuit actually reads
+    cardinality: int
+    #: support-order input slots + the circuit specialised to them (every
+    #: non-support input folded to CONST0) -- the refresh evaluator
+    kept: tuple = ()
+    residual: object = None  # None when the query folded to a constant
+    const: int | None = None  # that constant, when it did
+    pending: set = dataclasses.field(default_factory=set)  # global tile ids
+    last_refresh_info: dict | None = None
+
+
+class StreamingIndex:
+    """An updatable view over a (Sharded)BitmapIndex plus delta buffers."""
+
+    def __init__(self, index, *, policy: CompactionPolicy | None = None):
+        from repro.dist.query import ShardedBitmapIndex
+
+        self.policy = policy or CompactionPolicy()
+        self._sharded = isinstance(index, ShardedBitmapIndex)
+        self._base = index
+        self._names = tuple(index.names)
+        self._slot = {name: i for i, name in enumerate(self._names)}
+        self._views: dict[str, MaterializedView] = {}
+        self._version = 0
+        self._overlay_cache: tuple | None = None  # (version, index)
+        self.compactions = 0
+        self._reset_deltas()
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def from_dense(cls, bits, names=None, *, tile_words: int = 64,
+                   policy: CompactionPolicy | None = None) -> "StreamingIndex":
+        return cls(BitmapIndex.from_dense(bits, names, tile_words=tile_words),
+                   policy=policy)
+
+    @classmethod
+    def from_columns(cls, columns: dict, *, r: int | None = None,
+                     tile_words: int = 64,
+                     policy: CompactionPolicy | None = None) -> "StreamingIndex":
+        return cls(
+            BitmapIndex.from_columns(columns, r=r, tile_words=tile_words),
+            policy=policy,
+        )
+
+    def _reset_deltas(self) -> None:
+        if self._sharded:
+            self._deltas = [DeltaStore(s) for s in self._base.store.shards]
+        else:
+            self._deltas = [DeltaStore(self._base.store)]
+
+    # -- accessors ---------------------------------------------------------
+    @property
+    def names(self) -> tuple:
+        return self._names
+
+    @property
+    def n(self) -> int:
+        return len(self._names)
+
+    @property
+    def is_sharded(self) -> bool:
+        return self._sharded
+
+    @property
+    def tile_words(self) -> int:
+        return self._deltas[0].tile_words
+
+    @property
+    def r(self) -> int:
+        if self._sharded:
+            return self._bit_offsets()[-1] + self._deltas[-1].r
+        return self._deltas[0].r
+
+    @property
+    def delta_words(self) -> int:
+        return sum(d.delta_words for d in self._deltas)
+
+    @property
+    def views(self) -> tuple:
+        return tuple(self._views)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._slot
+
+    def __getitem__(self, name: str) -> Col:
+        if name not in self._slot:
+            raise KeyError(f"unknown column {name!r}")
+        return Col(name)
+
+    def delta_stats(self) -> dict:
+        return {
+            "patched_tiles": sum(d.patched_tiles for d in self._deltas),
+            "delta_words": self.delta_words,
+            "compactions": self.compactions,
+            "pending_view_tiles": sum(len(v.pending) for v in self._views.values()),
+        }
+
+    # -- shard routing -----------------------------------------------------
+    def _bit_offsets(self) -> list:
+        if not self._sharded:
+            return [0]
+        return [w * 32 for w in self._base.store.word_offsets]
+
+    def _tile_offsets(self) -> list:
+        """Global tile id of each shard's first tile (growth-aware)."""
+        offs, t0 = [], 0
+        for d in self._deltas:
+            offs.append(t0)
+            t0 += d.n_tiles
+        return offs
+
+    def _route_index(self, pos: np.ndarray) -> list:
+        """[(shard, selector into the batch)] for global bit positions."""
+        if not self._sharded:
+            return [(0, np.arange(pos.size))]
+        offs = np.asarray(self._bit_offsets())
+        shard_of = np.searchsorted(offs, pos, side="right") - 1
+        return [
+            (int(s), np.nonzero(shard_of == s)[0])
+            for s in np.unique(shard_of).tolist()
+        ]
+
+    # -- mutations ---------------------------------------------------------
+    def _data_slot(self, name: str) -> int:
+        if name not in self._slot:
+            raise KeyError(f"unknown column {name!r}; index has {sorted(self._slot)[:8]}...")
+        if name in self._views:
+            raise ValueError(
+                f"column {name!r} is a materialized view; mutate its inputs instead"
+            )
+        return self._slot[name]
+
+    def set_bits(self, name: str, positions) -> None:
+        self.update(sets={name: positions})
+
+    def clear_bits(self, name: str, positions) -> None:
+        self.update(clears={name: positions})
+
+    def update(self, sets: dict | None = None, clears: dict | None = None) -> None:
+        """Apply a batch of set/clear mutations as ONE index update (one
+        version bump, one auto-compaction check) -- the serving engine's
+        per-step path.  The whole batch flattens into a single vectorised
+        ``DeltaStore.apply_batch`` per owning shard; set masks apply before
+        clear masks."""
+        parts = []  # (slot, positions, on)
+        for mapping, on in ((sets, True), (clears, False)):
+            for name, positions in (mapping or {}).items():
+                slot = self._data_slot(name)
+                pos = np.atleast_1d(np.asarray(positions, dtype=np.int64))
+                if pos.size:
+                    parts.append((slot, pos, on))
+        if not parts:
+            return
+        sizes = [p.size for _, p, _ in parts]
+        cols = np.repeat(np.asarray([s for s, _, _ in parts], np.int64), sizes)
+        pos = np.concatenate([p for _, p, _ in parts])
+        on = np.repeat(np.asarray([o for _, _, o in parts], bool), sizes)
+        touched: dict[int, set] = {}
+        toffs = self._tile_offsets()
+        boffs = self._bit_offsets()
+        for shard, sel in self._route_index(pos):
+            per_col = self._deltas[shard].apply_batch(
+                cols[sel], pos[sel] - boffs[shard], on[sel]
+            )
+            for slot, tiles in per_col.items():
+                touched.setdefault(slot, set()).update(
+                    toffs[shard] + t for t in tiles
+                )
+        if touched:
+            self._after_mutation(touched)
+
+    def append_rows(self, bits) -> None:
+        """Append new row positions (products) to the universe: dense bool
+        ``[n_data_columns, k]`` in column-name order (materialized views
+        excluded -- their appended bits are computed, not supplied), or a
+        ``{name: bits}`` mapping (absent columns default to all-zero).
+        Under sharding the appended range extends the LAST shard -- no
+        resharding, no gather."""
+        data_slots = [
+            i for i, nm in enumerate(self._names) if nm not in self._views
+        ]
+        if isinstance(bits, dict):
+            k = None
+            for v in bits.values():
+                k = np.atleast_1d(np.asarray(v)).shape[-1]
+                break
+            if k is None:
+                return
+            arr = np.zeros((self.n, k), bool)
+            for name, row in bits.items():
+                arr[self._data_slot(name)] = np.asarray(row, bool)
+        else:
+            given = np.asarray(bits, bool)
+            if given.ndim != 2 or given.shape[0] != len(data_slots):
+                raise ValueError(
+                    f"expected bool[{len(data_slots)}, k] over the data "
+                    f"columns, got {given.shape}"
+                )
+            arr = np.zeros((self.n, given.shape[1]), bool)
+            arr[data_slots] = given
+        toffs = self._tile_offsets()
+        shard = len(self._deltas) - 1
+        tiles = self._deltas[shard].append_rows(arr)
+        gtiles = {toffs[shard] + t for t in tiles}
+        # every column's consumers see the appended range change -- and so
+        # does EVERY view, support or not: a view whose query folded to a
+        # constant (empty circuit support) still owes its constant over the
+        # new rows
+        self._after_mutation(
+            {slot: set(gtiles) for slot in range(self.n)}, appended=gtiles
+        )
+
+    def _after_mutation(self, touched: dict, appended: set | None = None) -> None:
+        self._version += 1
+        for view in self._views.values():
+            for slot, tiles in touched.items():
+                if slot in view.support:
+                    view.pending.update(tiles)
+            if appended:
+                view.pending.update(appended)
+        if self.policy.auto:
+            base_words = self._base_working_words()
+            if self.policy.should_compact(self.delta_words, base_words):
+                self.compact()
+
+    def _base_working_words(self) -> int:
+        if self._sharded:
+            return sum(s.dirty_words + s.n_words for s in self._base.store.shards)
+        return self._base.store.dirty_words + self._base.store.n_words
+
+    # -- overlay read path -------------------------------------------------
+    def index(self):
+        """The queryable (Sharded)BitmapIndex over ``base ⊕ delta``, with
+        every materialized view refreshed.  Cached per mutation version."""
+        self.refresh()
+        return self._overlay_index()
+
+    def _overlay_index(self):
+        if all(d.empty for d in self._deltas):
+            return self._base
+        if self._overlay_cache is not None and self._overlay_cache[0] == self._version:
+            return self._overlay_cache[1]
+        if self._sharded:
+            from repro.dist.query import ShardedBitmapIndex
+
+            shards = tuple(
+                s if d.empty else OverlayStore(s, d)
+                for s, d in zip(self._base.store.shards, self._deltas)
+            )
+            idx = ShardedBitmapIndex(
+                self._base.store.with_shards(shards), self._names
+            )
+        else:
+            idx = BitmapIndex(
+                names=self._names,
+                _store=OverlayStore(self._base.store, self._deltas[0]),
+            )
+        self._overlay_cache = (self._version, idx)
+        return idx
+
+    # -- queries -----------------------------------------------------------
+    def execute(self, query, **kw):
+        return self.index().execute(query, **kw)
+
+    def execute_many(self, queries, **kw):
+        return self.index().execute_many(queries, **kw)
+
+    def explain(self, query):
+        """The plan (unsharded) or per-shard plans (sharded) the next
+        execute would run, computed from the OVERLAID statistics."""
+        idx = self.index()
+        return idx.plan(query) if self._sharded else idx.explain(query)
+
+    def column(self, name: str):
+        return self.index().column(name)
+
+    def count(self, query) -> int:
+        """Result cardinality; a bare view column reads the incrementally
+        maintained count -- no execution, no popcount."""
+        q = as_query(query)
+        if type(q) is Col and q.name in self._views:
+            self.refresh()
+            return self._views[q.name].cardinality
+        idx = self.index()
+        return int(idx.count(q))
+
+    # -- materialized views ------------------------------------------------
+    def materialize(self, name: str, query) -> MaterializedView:
+        """Register ``query`` as a maintained result column ``name``.
+
+        The result is computed once and added as a real column of the base
+        index (the delta is compacted first so the new column's tile
+        classification lands in the base).  From then on, every mutation of
+        a column in the query's support marks the touched tiles, and the
+        next read refreshes ONLY those tiles by re-running the compiled
+        circuit over them.
+        """
+        if name in self._slot:
+            raise ValueError(f"column {name!r} already exists")
+        # implicit "all columns" member sets bind to the columns of NOW:
+        # the view must keep meaning what it meant when registered, even
+        # after more (view) columns join the schema
+        q = bind_members(as_query(query), self._names)
+        self.refresh()
+        self.compact(force=True)
+        res = self._base.execute(q)
+        if self._sharded:
+            card = sum(int(cardinality(s)) for s in res.shards)
+        else:
+            card = int(cardinality(res))
+        self._base = self._base.add_column(name, res)
+        self._names = tuple(self._base.names)
+        self._slot = {n: i for i, n in enumerate(self._names)}
+        self._reset_deltas()
+        circ = circuit_for((q,), self.n, self._names)
+        support = circ.support()
+        from repro.core.circuits import CONST0
+
+        const, residual, kept = circ.specialize(
+            {i: CONST0 for i in range(self.n) if i not in support}
+        )
+        view = MaterializedView(
+            name=name,
+            query=q,
+            slot=self._slot[name],
+            support=frozenset(support),
+            cardinality=card,
+            kept=tuple(kept),
+            residual=residual,
+            const=const[0],
+        )
+        self._views[name] = view
+        self._version += 1
+        return view
+
+    def view_info(self, name: str) -> dict | None:
+        """tiles_refreshed / words_touched accounting of the last refresh."""
+        return self._views[name].last_refresh_info
+
+    def refresh(self) -> None:
+        """Bring every materialized view up to date (tile-granular)."""
+        if not self._views:
+            return
+        for _ in range(len(self._views) + 1):
+            dirty = [v for v in self._views.values() if v.pending]
+            if not dirty:
+                return
+            for view in dirty:
+                self._refresh_view(view)
+        raise RuntimeError("materialized views failed to converge")  # pragma: no cover
+
+    def _gather_support_tiles(self, shard: int, kept: tuple,
+                              tiles: np.ndarray) -> np.ndarray:
+        """Current (base ⊕ delta) words of the support columns restricted to
+        ``tiles`` -- uint32[s, T, tile_words], one vectorised base pass plus
+        the delta's patched-tile overrides."""
+        d = self._deltas[shard]
+        tw = d.tile_words
+        s, T = len(kept), int(tiles.size)
+        cc = np.repeat(np.asarray(kept, np.int64), T)
+        tt = np.tile(tiles, s)
+        arr = base_tile_batch(d.base, cc, tt).reshape(s, T, tw)
+        tlist = tiles.tolist()
+        for j, c in enumerate(kept):
+            tmap = d._tiles.get(c)
+            if tmap:
+                for i, t in enumerate(tlist):
+                    got = tmap.get(t)
+                    if got is not None:
+                        arr[j, i] = got
+        return arr
+
+    def _refresh_view(self, view: MaterializedView) -> None:
+        """Re-run the view's support-specialised circuit over ONLY the
+        pending tiles (per owning shard) and patch the results into the
+        view column's delta; counts move by per-tile popcount deltas."""
+        import jax
+
+        from repro.kernels.threshold_ssum import INTERPRET, run_circuit_cached
+
+        tiles = np.asarray(sorted(view.pending), dtype=np.int64)
+        view.pending.clear()
+        toffs = self._tile_offsets()
+        words_touched = 0
+        gathered = 0
+        delta_card = 0
+        refreshed_tiles = set()
+        for shard, (t0, d) in enumerate(zip(toffs, self._deltas)):
+            local = tiles[(tiles >= t0) & (tiles < t0 + d.n_tiles)] - t0
+            if local.size == 0:
+                continue
+            tw = d.tile_words
+            if view.residual is None:
+                out = np.full((local.size, tw), 0xFFFFFFFF if view.const else 0,
+                              np.uint32)
+            else:
+                arr = self._gather_support_tiles(shard, view.kept, local)
+                gathered += arr.size
+                words_touched += arr.size
+                # off-TPU the straight-line jnp evaluator beats
+                # interpret-mode Pallas on these small tile batches
+                got = run_circuit_cached(
+                    jax.numpy.asarray(arr.reshape(len(view.kept), -1)),
+                    view.residual,
+                    pallas=not INTERPRET,
+                    interpret=INTERPRET,
+                )
+                out = np.array(jax.device_get(got), np.uint32).reshape(
+                    local.size, tw
+                )
+            words_touched += local.size * tw
+            span = tw * 32
+            for li, t in enumerate(local.tolist()):
+                # the universe may end inside this tile: a truth table with
+                # f(0)=1 would otherwise set padding bits past r, corrupting
+                # the popcount-delta count
+                end = d.r - t * span
+                if end < span:
+                    w = out[li]
+                    fw, rem = end // 32, end % 32
+                    if rem:
+                        w[fw] &= np.uint32((1 << rem) - 1)
+                        w[fw + 1 :] = 0
+                    else:
+                        w[fw:] = 0
+                delta_card += d.patch_tile(view.slot, int(t), out[li])
+            refreshed_tiles.update((t0 + local).tolist())
+        view.cardinality += delta_card
+        view.last_refresh_info = {
+            "tiles_refreshed": int(tiles.size),
+            "words_gathered": int(gathered),
+            "words_touched": int(words_touched),
+            "cardinality_delta": int(delta_card),
+        }
+        self._version += 1
+        # a view is an input to any later view that references it
+        for other in self._views.values():
+            if other is not view and view.slot in other.support:
+                other.pending.update(refreshed_tiles)
+
+    # -- compaction --------------------------------------------------------
+    def compact(self, force: bool = True) -> bool:
+        """Fold the delta into a new base store, tile-granularly.
+
+        Only touched tiles reclassify (``TileStore.apply_tile_updates``);
+        under sharding each shard compacts its own delta locally.  Returns
+        True when a merge actually happened.  ``force=False`` applies the
+        :class:`CompactionPolicy` threshold instead of compacting
+        unconditionally.
+        """
+        self.refresh()
+        if all(d.empty for d in self._deltas):
+            return False
+        if not force and not self.policy.should_compact(
+            self.delta_words, self._base_working_words()
+        ):
+            return False
+        if self._sharded:
+            from repro.dist.query import ShardedBitmapIndex
+
+            shards = tuple(
+                s if d.empty else s.apply_tile_updates(d.updates(), r=d.r)
+                for s, d in zip(self._base.store.shards, self._deltas)
+            )
+            self._base = ShardedBitmapIndex(
+                self._base.store.with_shards(shards), self._names
+            )
+        else:
+            store = self._base.store.apply_tile_updates(
+                self._deltas[0].updates(), r=self._deltas[0].r
+            )
+            self._base = BitmapIndex(names=self._names, _store=store)
+        self._reset_deltas()
+        self._overlay_cache = None
+        self._version += 1
+        self.compactions += 1
+        return True

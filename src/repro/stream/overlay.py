@@ -1,0 +1,268 @@
+"""`OverlayStore`: a TileStore-shaped read view of ``base ⊕ delta``.
+
+Every executor in ``repro.query.executors`` reads a shard through a
+``ShardContext`` whose data accessors come from a store: the tiled path
+gathers ``store.dirty[store.dirty_index[...]]`` guided by
+``store.classes_word``, the dense paths pull ``store.densify()``, and the
+planner prices both from ``store.member_stats``.  ``OverlayStore``
+implements exactly that surface over an immutable base :class:`TileStore`
+plus a :class:`~repro.stream.delta.DeltaStore` -- so a streaming index
+answers EVERY backend (tiled, circuit, fused, wide OR/AND, scancount,
+dsk, ...) bit-identically to a from-scratch rebuild, without merging:
+
+  * ``classes_word`` is the base classification with ONLY the patched
+    tiles reclassified (a clean tile a delta bit landed in stops masking
+    as a constant; a dirty tile cleared to all-zero starts to);
+  * ``dirty`` is the base packed dirty array with the patched tiles'
+    words appended at the end; ``dirty_index`` redirects patched tiles
+    there, so tiled gathers read patched words and never stale base rows;
+  * ``densify()`` scatters the patched tiles into the (cached) base dense
+    view in one device op;
+  * ``member_stats`` / ``cardinalities`` fold the delta's popcount deltas
+    in, so the planner prices the overlaid data, not the stale base.
+
+Construction is O(metadata + patched tiles); nothing is respliced.  Cold
+paths that genuinely need a merged store (bit-level RUN stats,
+reclassification at another granularity) fall back to :meth:`solid` --
+``base.apply_tile_updates(...)``, the same tile-granular merge compaction
+adopts.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bitmaps import n_words_for
+from repro.storage import TILE_DIRTY, TILE_ONE, TILE_ZERO, MemberStats, TileStore
+from repro.storage.tiles import BlockStats
+from repro.storage.tilestore import _popcount_words, _signature_counts
+
+from .delta import DeltaStore, base_tile_batch
+
+__all__ = ["OverlayStore"]
+
+
+class OverlayStore:
+    """Read-only TileStore-duck-typed view of a base store plus a delta."""
+
+    def __init__(self, base: TileStore, delta: DeltaStore):
+        if delta.base is not base:
+            raise ValueError("delta was recorded against a different base store")
+        self.base = base
+        # SNAPSHOT the delta at construction: every surface of this view
+        # (tiled gathers, dense view, cardinalities, solid()) must describe
+        # the same instant, or a stale index reference would answer
+        # backend-dependently after later mutations
+        self._patched = delta.snapshot()
+        self.tile_words = tw = base.tile_words
+        self.r = delta.r
+        self.n_words = n_words_for(self.r)
+        self.n_tiles = (self.n_words + tw - 1) // tw
+        n = base.n
+
+        classes = np.zeros((n, self.n_tiles), np.uint8)
+        classes[:, : base.n_tiles] = base.classes_word
+        index = np.full((n, self.n_tiles), -1, np.int64)
+        index[:, : base.n_tiles] = base.dirty_index
+        base_nd = base._dirty_np.shape[0]
+        # flatten the snapshot's patched tiles into ONE vectorised pass --
+        # classification, class scatter, dirty redirection
+        pc, pt, words = [], [], []
+        for col, tmap in self._patched.items():
+            pc.extend([col] * len(tmap))
+            pt.extend(tmap.keys())
+            words.extend(tmap.values())
+        if pc:
+            pcols = np.asarray(pc, np.int64)
+            ptiles = np.asarray(pt, np.int64)
+            pwords = np.stack(words)  # [P, tw]
+            any_set = pwords.any(axis=1)
+            all_one = (pwords == 0xFFFFFFFF).all(axis=1)
+            cls = np.where(
+                all_one, TILE_ONE, np.where(any_set, TILE_DIRTY, TILE_ZERO)
+            ).astype(np.uint8)
+            classes[pcols, ptiles] = cls
+            dirty = cls >= TILE_DIRTY
+            idx_vals = np.full(pcols.size, -1, np.int64)
+            idx_vals[dirty] = base_nd + np.arange(int(dirty.sum()))
+            index[pcols, ptiles] = idx_vals
+            self._extra = np.ascontiguousarray(pwords[dirty])
+        else:
+            self._extra = np.zeros((0, tw), np.uint32)
+        self._classes_word = classes
+        self._dirty_index = index
+        self._dirty_np_cache: np.ndarray | None = None
+        self._dirty_dev = None
+        self._dense = None
+        self._solid_cache: TileStore | None = None
+        self._member_stats_cache: dict = {}
+        self._card_cache: tuple | None = None
+
+    # -- geometry / identity ----------------------------------------------
+    @property
+    def n(self) -> int:
+        return self.base.n
+
+    # -- tile-path surface (what run_tiled_circuit reads) ------------------
+    @property
+    def classes_word(self) -> np.ndarray:
+        return self._classes_word
+
+    @property
+    def dirty_index(self) -> np.ndarray:
+        return self._dirty_index
+
+    @property
+    def _dirty_np(self) -> np.ndarray:
+        if self._dirty_np_cache is None:
+            self._dirty_np_cache = (
+                np.concatenate([self.base._dirty_np, self._extra])
+                if self._extra.size
+                else self.base._dirty_np
+            )
+        return self._dirty_np_cache
+
+    @property
+    def dirty(self) -> jax.Array:
+        if self._dirty_dev is None:
+            if self._extra.size:
+                self._dirty_dev = jnp.concatenate(
+                    [self.base.dirty, jnp.asarray(self._extra)]
+                )
+            else:
+                self._dirty_dev = self.base.dirty
+        return self._dirty_dev
+
+    # -- dense-path surface ------------------------------------------------
+    def densify(self) -> jax.Array:
+        """Dense view with the patched tiles scattered in.
+
+        Built host-side from the base tiles (vectorised row scatter into
+        the padded ``[n, n_tiles, tile_words]`` layout, one upload) --
+        device-side scatters recompile per delta shape, which dominated
+        wall time for large deltas.  Cached per overlay.
+        """
+        if self._dense is not None:
+            return self._dense
+        tw = self.tile_words
+        padded = np.zeros((self.n, self.n_tiles, tw), np.uint32)
+        bt = self.base.n_tiles
+        pbase = padded[:, :bt]
+        pbase[self.base.classes_word == TILE_ONE] = 0xFFFFFFFF
+        pbase[self.base.classes_word >= TILE_DIRTY] = self.base._dirty_np
+        for col, tmap in self._patched.items():
+            ts = np.fromiter(tmap, np.int64, len(tmap))
+            padded[col, ts] = np.stack(list(tmap.values()))
+        self._dense = jnp.asarray(
+            padded.reshape(self.n, -1)[:, : self.n_words]
+        )
+        return self._dense
+
+    def column(self, i: int) -> jax.Array:
+        return self.densify()[int(i)]
+
+    # -- planner surface ---------------------------------------------------
+    @property
+    def cardinalities(self) -> tuple:
+        if self._card_cache is None:
+            deltas = {}
+            for col, tmap in self._patched.items():
+                ts = list(tmap)
+                patched = np.stack([tmap[t] for t in ts])
+                basew = base_tile_batch(self.base, [col] * len(ts), ts)
+                deltas[col] = _popcount_words(patched) - _popcount_words(basew)
+            self._card_cache = tuple(
+                c + deltas.get(i, 0)
+                for i, c in enumerate(self.base.cardinalities)
+            )
+        return self._card_cache
+
+    @property
+    def densities(self) -> tuple:
+        return tuple(c / max(self.r, 1) for c in self.cardinalities)
+
+    @property
+    def clean_fraction(self) -> float:
+        if self._classes_word.size == 0:
+            return 1.0
+        return float((self._classes_word <= TILE_ONE).mean())
+
+    @property
+    def dirty_words(self) -> int:
+        return int((self._classes_word >= TILE_DIRTY).sum()) * self.tile_words
+
+    def member_stats(self, slots=None) -> MemberStats:
+        """Same aggregate `TileStore.member_stats` computes, over the
+        overlaid classes and cardinalities (cached per subset)."""
+        key = None if slots is None else tuple(slots)
+        cached = self._member_stats_cache.get(key)
+        if cached is not None:
+            return cached
+        idx = np.arange(self.n) if slots is None else np.asarray(list(key))
+        if idx.size == 0:
+            return MemberStats(0, self.n_words, self.tile_words, 1.0, 0.0, 0, 0)
+        cls = self._classes_word[idx]
+        dirty_tiles = int((cls >= TILE_DIRTY).sum())
+        cards = self.cardinalities
+        dens = [cards[i] / max(self.r, 1) for i in idx]
+        sigs, counts = _signature_counts(cls)
+        signatures = tuple(
+            (int(cnt), int((sig == TILE_ONE).sum()), int((sig >= TILE_DIRTY).sum()))
+            for sig, cnt in zip(sigs, counts)
+        )
+        stats = MemberStats(
+            n=int(idx.size),
+            n_words=self.n_words,
+            tile_words=self.tile_words,
+            clean_fraction=1.0 - dirty_tiles / max(cls.size, 1),
+            density=float(np.mean(dens)),
+            dirty_words=dirty_tiles * self.tile_words,
+            case3_tiles=int(((cls >= TILE_DIRTY).any(axis=0)).sum()),
+            signatures=signatures,
+        )
+        self._member_stats_cache[key] = stats
+        return stats
+
+    def block_stats(self) -> BlockStats:
+        return BlockStats(
+            classes=self._classes_word.copy(),
+            tile_words=self.tile_words,
+            n_words=self.n_words,
+        )
+
+    # -- cold paths: fall back to the merged store -------------------------
+    def solid(self) -> TileStore:
+        """The merged (base ⊕ snapshot) TileStore -- what compaction would
+        have adopted at this view's instant; built lazily, tile-granularly,
+        and cached."""
+        if self._solid_cache is None:
+            self._solid_cache = self.base.apply_tile_updates(
+                {c: dict(t) for c, t in self._patched.items()}, r=self.r
+            )
+        return self._solid_cache
+
+    @property
+    def col_stats(self) -> tuple:
+        return self.solid().col_stats
+
+    @property
+    def runcounts(self) -> tuple:
+        return self.solid().runcounts
+
+    @property
+    def classes(self) -> np.ndarray:
+        return self.solid().classes
+
+    def with_tile_words(self, tile_words: int) -> "TileStore":
+        return self.solid().with_tile_words(tile_words)
+
+    # -- mutations are the streaming engine's job --------------------------
+    def append(self, packed_row):
+        raise TypeError(
+            "OverlayStore is a read view; mutate through StreamingIndex "
+            "(set_bits/clear_bits/append_rows) or compact() first"
+        )
+
+    replace = append
+    slice_tiles = append

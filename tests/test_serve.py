@@ -6,6 +6,7 @@ import pytest
 
 from repro.configs import get_config
 from repro.models import decode_step, forward, init_cache, init_params
+from repro.query import Col
 from repro.serve import Request, ServeEngine
 
 CFG = get_config("qwen3-1.7b", reduced=True)
@@ -83,6 +84,40 @@ def test_engine_across_mixer_families(arch):
         [Request(rid=i, prompt=p, max_new=3) for i, p in enumerate(prompts)])}
     for i, exp in enumerate(expected):
         assert done[i].out == exp, (arch, i, done[i].out, exp)
+
+
+def test_step_coalesces_slot_updates_into_one_version():
+    """Completions + admissions land as ONE batched index update per event
+    batch: a step retiring several requests at once bumps ``_slot_version``
+    exactly once (the streaming slot index absorbs all changes in a single
+    delta apply), and the index answers queries consistently afterwards."""
+    eng = ServeEngine(CFG, PARAMS, batch_slots=4, max_seq=64)
+    for i in range(3):
+        assert eng.submit(Request(rid=i, prompt=[i + 1, 2], max_new=1))
+    assert eng.free_slots() == [3]
+    v0 = eng._slot_version
+    eng.step()  # all three requests complete in this one step
+    assert eng._slot_version == v0 + 1, "step must apply one batched update"
+    assert eng.free_slots() == [0, 1, 2, 3]
+    # the slot index is a StreamingIndex-maintained overlay, not a rebuild
+    from repro.stream import StreamingIndex
+
+    assert isinstance(eng._slot_stream, StreamingIndex)
+
+
+def test_slot_queries_track_near_limit_margin():
+    """Positions crossing the margin flip ``near_limit`` through the same
+    batched path; draining_slots sees them without a rebuild."""
+    eng = ServeEngine(CFG, PARAMS, batch_slots=2, max_seq=16)
+    assert eng.submit(Request(rid=0, prompt=[1, 2, 3], max_new=12))
+    assert eng.draining_slots() == []
+    v0 = eng._slot_version
+    for _ in range(6):  # pos 3 -> 9 >= 16 - 8
+        eng.step()
+    assert eng._slot_version == v0 + 6
+    assert eng.draining_slots() == [0]
+    # non-default margins build a transient index from current state
+    assert eng.slot_index(near_limit_margin=16).count(Col("near_limit")) == 1
 
 
 def test_encoder_only_rejected():

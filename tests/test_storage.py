@@ -93,6 +93,68 @@ def test_append_replace_share_and_reclassify():
     )
 
 
+def test_apply_tile_updates_is_tile_granular():
+    """Only touched tiles reclassify; untouched columns share _Column
+    objects outright and cardinality moves by popcount deltas."""
+    bits = _tiled_bits(4, 6, 0.5, seed=9, tail_bits=77)
+    store = TileStore.from_packed(np.asarray(pack(jnp.asarray(bits))))
+    tw = store.tile_words
+    new_tile = np.zeros(tw, np.uint32)
+    new_tile[:3] = 0xFFFFFFFF
+    updated = store.apply_tile_updates({1: {2: new_tile}})
+    # untouched columns are shared, not copied
+    for i in (0, 2, 3):
+        assert updated._cols[i] is store._cols[i]
+    dense = np.asarray(updated.densify())
+    base = np.asarray(store.densify())
+    np.testing.assert_array_equal(dense[[0, 2, 3]], base[[0, 2, 3]])
+    np.testing.assert_array_equal(dense[1, 2 * tw : 3 * tw], new_tile)
+    np.testing.assert_array_equal(dense[1, : 2 * tw], base[1, : 2 * tw])
+    old_tile_pop = int(np.unpackbits(
+        base[1, 2 * tw : 3 * tw].view(np.uint8)).sum())
+    assert updated.cardinalities[1] == store.cardinalities[1] - old_tile_pop + 96
+
+
+def test_apply_tile_updates_class_transitions_and_growth():
+    bits = _tiled_bits(2, 4, 0.0, seed=10)
+    store = TileStore.from_packed(np.asarray(pack(jnp.asarray(bits))))
+    tw = store.tile_words
+    zeros = np.zeros(tw, np.uint32)
+    ones = np.full(tw, 0xFFFFFFFF, np.uint32)
+    updated = store.apply_tile_updates({0: {0: zeros, 1: ones}})
+    assert updated.classes_word[0, 0] == TILE_ZERO
+    assert updated.classes_word[0, 1] == TILE_ONE
+    assert updated.dirty_index[0, 0] == -1 and updated.dirty_index[0, 1] == -1
+    # universe growth: new tiles default all-zero everywhere
+    grown = store.apply_tile_updates({}, r=store.r + 3 * SPAN)
+    assert grown.n_tiles == store.n_tiles + 3
+    assert (grown.classes_word[:, store.n_tiles :] == TILE_ZERO).all()
+    np.testing.assert_array_equal(
+        np.asarray(grown.densify())[:, : store.n_words], np.asarray(store.densify())
+    )
+    assert grown.cardinalities == store.cardinalities
+    with pytest.raises(ValueError):
+        store.apply_tile_updates({}, r=store.r - 1)  # no shrinking
+    with pytest.raises(ValueError):
+        store.apply_tile_updates({0: {99: zeros}})  # tile out of range
+
+
+def test_run_tiled_circuit_restricted_to_tiles():
+    bits = _tiled_bits(5, 8, 0.6, seed=11, tail_bits=33)
+    store = TileStore.from_packed(np.asarray(pack(jnp.asarray(bits))))
+    circ = build_threshold_circuit(5, 2, "ssum")
+    full, info_full = run_tiled_circuit(store, circ)
+    sel = np.array([0, 3, store.n_tiles - 1])
+    sub, info = run_tiled_circuit(store, circ, tiles=sel)
+    assert sub.shape == (1, sel.size, store.tile_words)
+    assert info["dirty_words_gathered"] <= info_full["dirty_words_gathered"]
+    padded = np.zeros(store.n_tiles * store.tile_words, np.uint32)
+    padded[: store.n_words] = np.asarray(full)
+    padded = padded.reshape(store.n_tiles, store.tile_words)
+    for li, t in enumerate(sel.tolist()):
+        np.testing.assert_array_equal(sub[0, li], padded[t])
+
+
 def test_member_stats_per_subset_not_index_mean():
     n_tiles = 8
     clean = np.zeros((1, n_tiles * SPAN), bool)  # fully clean column
