@@ -35,6 +35,7 @@ from repro.query import (
 
 CLEAN_FRACTIONS = (0.0, 0.5, 0.9, 0.99)
 SHARD_COUNTS = (1, 2, 4, 8)
+DENSITIES = (1e-4, 1e-3, 1e-2, 0.1, 0.5)
 
 
 def _time(fn, reps=5):
@@ -108,6 +109,58 @@ def clean_fraction_sweep(smoke: bool = False) -> list:
             }
         )
     return sweep
+
+
+def sparsity_sweep(smoke: bool = False) -> list:
+    """Column-density sweep 1e-4 .. 0.5: memory footprint and words touched
+    per container kind, container store vs the legacy dense dirty pack.
+
+    The query is the membership scan Threshold(1) (every dirty tile
+    participates, so nothing hides behind case-1/2 folding) forced through
+    ``tiled_fused`` on both stores -- the words-touched delta is purely the
+    container representation.  The acceptance bar: >= 4x reduction at
+    density <= 1e-3, no regression at 0.5 (where every container is dense
+    and both stores are byte-identical).
+    """
+    n, n_tiles = (8, 8) if smoke else (16, 48)
+    span = 64 * 32
+    r = n_tiles * span
+    q = Threshold(1)
+    out = []
+    for d in DENSITIES:
+        rng = np.random.default_rng(int(1 / d) % 2**31)
+        bits = rng.random((n, r)) < d
+        idx = BitmapIndex.from_dense(jnp.asarray(bits))
+        legacy = BitmapIndex.from_dense(jnp.asarray(bits), containers=False)
+        t_cont = _time(lambda: idx.execute(q, backend="tiled_fused"))
+        info = idx.last_info
+        t_leg = _time(lambda: legacy.execute(q, backend="tiled_fused"))
+        linfo = legacy.last_info
+        words = info["dirty_words_gathered"] + idx.n_words
+        words_legacy = linfo["dirty_words_gathered"] + idx.n_words
+        out.append(
+            {
+                "density": d,
+                "n": n,
+                "n_words": idx.n_words,
+                "dense_words": idx.n * idx.n_words + idx.n_words,
+                "census": idx.store.container_census(),
+                "memory_words": idx.store.storage_words(),
+                "memory_words_legacy": legacy.store.storage_words(),
+                "words_touched": words,
+                "words_touched_legacy": words_legacy,
+                "words_by_kind": info["words_by_kind"],
+                "event_tiles": info["event_tiles"],
+                "densified_tiles": info["densified_tiles"],
+                # container pack reads vs the dense dirty pack's (the output
+                # write pass is identical on both sides and excluded)
+                "reduction": linfo["dirty_words_gathered"]
+                / max(1, info["dirty_words_gathered"]),
+                "wall_us": t_cont * 1e6,
+                "wall_us_legacy": t_leg * 1e6,
+            }
+        )
+    return out
 
 
 def _mixed_density_bits(n, n_tiles, seed=0, span=64 * 32):
@@ -237,7 +290,8 @@ def run(smoke: bool = False, sweep: list | None = None):
 
 
 def write_json(path: str = "BENCH_query.json", smoke: bool = False,
-               sweep: list | None = None, shards: list | None = None) -> dict:
+               sweep: list | None = None, shards: list | None = None,
+               sparsity: list | None = None) -> dict:
     """Write the perf-trajectory artifact consumed by CI."""
     payload = {
         "bench": "query",
@@ -245,6 +299,7 @@ def write_json(path: str = "BENCH_query.json", smoke: bool = False,
         "n_devices": len(jax.devices()),
         "clean_fraction_sweep": sweep if sweep is not None else clean_fraction_sweep(smoke),
         "shard_sweep": shards if shards is not None else shard_sweep(smoke),
+        "sparsity_sweep": sparsity if sparsity is not None else sparsity_sweep(smoke),
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)
@@ -257,9 +312,10 @@ if __name__ == "__main__":
     smoke = "--smoke" in sys.argv
     sweep = clean_fraction_sweep(smoke)  # measured once, printed + persisted
     shards = shard_sweep(smoke)
+    sparsity = sparsity_sweep(smoke)
     for name, val, extra in run(smoke, sweep=sweep):
         print(f"{name},{val:.2f},{extra}")
-    write_json(smoke=smoke, sweep=sweep, shards=shards)
+    write_json(smoke=smoke, sweep=sweep, shards=shards, sparsity=sparsity)
     for row in sweep:
         be = row["backends"]
         print(
@@ -271,5 +327,13 @@ if __name__ == "__main__":
         print(
             f"shards={row['n_shards']} ({row['mode']}): {row['wall_us']:.0f} us, "
             f"backends {sorted(set(row['backends']))}"
+        )
+    for row in sparsity:
+        c = row["census"]
+        print(
+            f"density={row['density']}: {row['words_touched']} words vs "
+            f"{row['words_touched_legacy']} legacy ({row['reduction']:.1f}x), "
+            f"mem {row['memory_words']}/{row['memory_words_legacy']} words, "
+            f"census d/s/r={c['dense']}/{c['sparse']}/{c['run']}"
         )
     print("wrote BENCH_query.json")

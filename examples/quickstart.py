@@ -28,6 +28,15 @@ print(f"{idx.n} stores x {idx.r} products, "
 print(f"tile stats: {stats.clean_fraction:.0%} clean tiles, "
       f"{stats.dirty_words} dirty words stored")
 
+# per-container tile census for the abstract's 2..10-stores query: dirty
+# tiles live as dense words, sparse position lists or run intervals --
+# whichever is cheapest (compressed_words <= the dense dirty pack)
+census = idx.store.container_census()
+print(f"container census               : {census['dense']} dense / "
+      f"{census['sparse']} sparse / {census['run']} run tiles, "
+      f"{census['storage_words']} words stored "
+      f"(dense pack would be {census['dense_equiv_words']})")
+
 # the abstract's query: on sale in 2 to 10 stores -- with the chosen plan
 # and its estimated cost (words touched) from the tile-stats cost model
 plan = idx.explain(Interval(2, 10))
@@ -55,10 +64,16 @@ print(f"threshold/parity/exactly-once : "
       f"{int(unpack(rare, idx.r).sum())}")
 
 # results are bitmaps: feed one back in as a virtual column and keep
-# querying (add_column returns a NEW index; the old one stays valid)
+# querying (add_column returns a NEW index; the old one stays valid) --
+# the result column is itself compressed into the cheapest container
 idx = idx.add_column("hot", hot)
 promo = idx.execute(And(Col("hot"), Col("store0")))
 print(f"hot AND in store 0            : {int(unpack(promo, idx.r).sum()):6d}")
+rare = idx.execute(Interval(6, 12))  # a handful of products match
+idx = idx.add_column("rare", rare)
+c = idx.store.container_census(slots=[idx.names.index("rare")])
+print(f"'rare' stored as              : {c['sparse']} sparse / {c['run']} run "
+      f"/ {c['dense']} dense tiles ({c['storage_words']} words)")
 
 # sub-queries can even vote inside a threshold: 2 of these 3 criteria
 panel = Threshold(2, over=(Col("store0"), Col("store1"), Interval(4, 10)))

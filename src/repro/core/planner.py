@@ -115,6 +115,14 @@ def estimate_words_touched(
         if stats is None:
             return None
         n_tiles = max(1, int(nw) // max(1, stats.tile_words))
+        # container compression ratio of the member subset: the executor
+        # gathers sparse/run tiles as their compressed payloads (or
+        # evaluates them event-natively), so the words it moves scale with
+        # the stored container sizes, not the dense dirty pack.  1.0 when
+        # every container is dense / containers are off -- estimates are
+        # monotone in container size and never exceed the dense-pack model.
+        compressed = getattr(stats, "compressed_words", 0) or stats.dirty_words
+        ratio = compressed / stats.dirty_words if stats.dirty_words else 1.0
         sigs = getattr(stats, "signatures", ())
         if sigs:
             # Per-signature model: a signature launches a residual kernel only
@@ -144,16 +152,18 @@ def estimate_words_touched(
                     groups.add(dirty)
                 gathered += cnt * dirty * stats.tile_words
             launches = len(groups)
+            gathered = gathered * ratio  # compressed tiles gather less
             if overflow_tiles:
+                # overflow runs a dense gather of the full member support
                 gathered += overflow_tiles * n * stats.tile_words
                 launches += 1
             return (
                 float(gathered) + nw + n_tiles
                 + _LAUNCH_OVERHEAD_WORDS * launches
             )
-        # no signature stats: gathered dirty words + one output pass +
-        # per-tile bookkeeping (the legacy coarse estimate)
-        return float(stats.dirty_words) + nw + n_tiles
+        # no signature stats: gathered (compressed) words + one output pass
+        # + per-tile bookkeeping (the legacy coarse estimate)
+        return float(compressed) + nw + n_tiles
     if backend == "rbmrg_block":
         if stats is None:
             return None

@@ -557,6 +557,12 @@ class ShardedBitmapIndex:
                 i["dirty_words_gathered"] for i in infos if i
             ),
             "launches": sum(i["launches"] for i in infos if i),
+            # container-native accounting (tiled shards only): storage
+            # words read compressed + tiles resolved without densification
+            "compressed_words_gathered": sum(
+                i.get("compressed_words_gathered", 0) for i in infos if i
+            ),
+            "event_tiles": sum(i.get("event_tiles", 0) for i in infos if i),
         }
         return per_shard
 

@@ -148,7 +148,11 @@ class IndexStats:
     tile_words: int
     clean_fractions: tuple = ()  # per column
     runcounts: tuple = ()  # per column (paper's RUNCOUNT)
-    dirty_words: int = 0  # words stored for dirty/run tiles
+    dirty_words: int = 0  # words a dense dirty pack would store
+    #: (dense, sparse, run) container tile counts across the index
+    container_tiles: tuple = (0, 0, 0)
+    #: words the container packs actually occupy (<= dirty_words)
+    compressed_words: int = 0
 
 
 # ---------------------------------------------------------------------------
@@ -160,7 +164,8 @@ class BitmapIndex:
     """A queryable collection of named packed bitmaps over one universe."""
 
     def __init__(self, columns=None, names=None, *, r: int | None = None,
-                 tile_words: int = 64, _store: TileStore | None = None):
+                 tile_words: int = 64, containers: bool = True,
+                 _store: TileStore | None = None):
         # classification is deferred to first `store` access: a transient
         # index executed with an explicit backend override never pays the
         # device_get + tile-classification pass
@@ -177,6 +182,7 @@ class BitmapIndex:
             self._pending = cols
             self.r = int(r) if r is not None else n_words * 32
         self._tile_words = int(tile_words)
+        self._containers = bool(containers)
         self._n, self._n_words = int(n), int(n_words)
         if names is None:
             names = tuple(f"c{i}" for i in range(n))
@@ -196,10 +202,12 @@ class BitmapIndex:
 
     # -- construction ------------------------------------------------------
     @classmethod
-    def from_dense(cls, bits, names=None, *, tile_words: int = 64) -> "BitmapIndex":
+    def from_dense(cls, bits, names=None, *, tile_words: int = 64,
+                   containers: bool = True) -> "BitmapIndex":
         """Build from a dense boolean/int array [N, r]."""
         bits = jnp.asarray(bits)
-        return cls(pack(bits), names, r=bits.shape[-1], tile_words=tile_words)
+        return cls(pack(bits), names, r=bits.shape[-1], tile_words=tile_words,
+                   containers=containers)
 
     @classmethod
     def from_columns(cls, columns: dict, *, r: int | None = None,
@@ -217,7 +225,8 @@ class BitmapIndex:
         """The underlying tile-classified column store (built on demand)."""
         if self._store_cache is None:
             self._store_cache = TileStore.from_packed(
-                self._pending, tile_words=self._tile_words, r=self.r
+                self._pending, tile_words=self._tile_words, r=self.r,
+                containers=self._containers,
             )
             self._pending = None
         return self._store_cache
@@ -320,6 +329,7 @@ class BitmapIndex:
             return cached
         store = self.store.with_tile_words(tw)
         dens = store.densities
+        census = store.container_census()
         st = IndexStats(
             n=store.n,
             n_words=store.n_words,
@@ -332,6 +342,8 @@ class BitmapIndex:
             clean_fractions=tuple(s.clean_fraction for s in store.col_stats),
             runcounts=store.runcounts,
             dirty_words=store.dirty_words,
+            container_tiles=(census["dense"], census["sparse"], census["run"]),
+            compressed_words=census["storage_words"],
         )
         self._stats_cache[tw] = st
         return st

@@ -14,6 +14,15 @@ The single home of tile classification and tile-skipping execution:
     ``core/blockrle.py``, which is now a deprecated re-export shim).
 """
 
+from .containers import (
+    CONT_DENSE,
+    CONT_NONE,
+    CONT_RUN,
+    CONT_SPARSE,
+    CONTAINER_CROSSOVER,
+    run_max_intervals,
+    sparse_max_positions,
+)
 from .tiles import BlockStats, classify_tiles, rbmrg_block_threshold, runcount
 from .tilestore import (
     TILE_DIRTY,
@@ -38,5 +47,12 @@ __all__ = [
     "TILE_ONE",
     "TILE_DIRTY",
     "TILE_RUN",
+    "CONT_NONE",
+    "CONT_DENSE",
+    "CONT_SPARSE",
+    "CONT_RUN",
+    "CONTAINER_CROSSOVER",
+    "sparse_max_positions",
+    "run_max_intervals",
     "run_tiled_circuit",
 ]

@@ -11,8 +11,14 @@ batched queries), using :meth:`Circuit.specialize`:
   2. partially evaluate the circuit per signature.  Outputs that fold to
      constants are the case-1/case-2 tiles: written directly, zero bit
      work, zero HBM traffic;
-  3. for the rest, gather ONLY the dirty tiles from the store's packed
-     dirty array into one ``[n_dirty, m * tile_words]`` batch and dispatch
+  3. for the rest, execute *container-natively*: tiles whose residual
+     inputs are all sparse/run containers (and whose compressed payload
+     undercuts the dense gather) are resolved by merging their boundary
+     events against the residual's exact truth table -- the paper's
+     MergeOpt/ScanCount algorithms re-expressed over compressed tiles --
+     so the bit work scales with container sizes, not tile spans;
+  4. the remaining tiles gather (decompressing on the fly, never
+     store-wide) into one ``[n_dirty, m * tile_words]`` batch and dispatch
      one fused Pallas call per *structurally distinct residual circuit* --
      signatures whose residuals fold to the same gate DAG (for a bare
      threshold, any two signatures with equal (T - #ones, #dirty)) are
@@ -37,6 +43,13 @@ from repro.core.circuits import (
     Circuit,
 )
 
+from .containers import (
+    CONT_DENSE,
+    CONT_RUN,
+    CONT_SPARSE,
+    CONTAINER_CROSSOVER,
+    evaluate_event_tiles,
+)
 from .tilestore import TILE_ONE, TILE_ZERO, TileStore, _signature_counts
 
 __all__ = ["run_tiled_circuit"]
@@ -147,6 +160,10 @@ def run_tiled_circuit(
         "dirty_words_gathered": 0,
         "total_words": int(store.n * nw),
         "launches": 0,
+        "event_tiles": 0,  # case-3 tiles resolved container-natively
+        "densified_tiles": 0,  # case-3 tiles resolved by a dense gather
+        "compressed_words_gathered": 0,  # storage words read from containers
+        "words_by_kind": {"dense": 0, "sparse": 0, "run": 0},
     }
 
     def _finish():
@@ -213,27 +230,134 @@ def run_tiled_circuit(
         live = tuple(j for j, cval in enumerate(const) if cval is None)
         merged.setdefault((rkey, live), [res, []])[1].append((tiles, kept))
 
-    # Pass 2: one gather + one (structurally cached) kernel per merged group.
-    for (_rkey, live), (res, entries) in merged.items():
-        tiles = np.concatenate([t for t, _ in entries])
-        # residual input order follows each signature's kept-column order, so
-        # tiles from different signatures feed the same kernel wires
-        rows = np.concatenate(
-            [store.dirty_index[kept][:, sel[t] if restricted else t]
-             for t, kept in entries], axis=1
-        )  # [d, m], all >= 0 by signature
-        gathered = store.dirty[rows.reshape(-1)].reshape(res.n_inputs, -1)
-        info["dirty_words_gathered"] += int(gathered.size)
-        info["launches"] += 1
-        got = run_circuit_cached(
-            gathered, res, block_words=block_words, interpret=interpret, pallas=pallas
+    # Pass 2: per merged group, split its case-3 tiles by representation.
+    # Tiles whose residual inputs are ALL compressed containers (sparse /
+    # run) -- and whose compressed payload undercuts the dense gather by
+    # the crossover -- are evaluated container-natively: boundary events
+    # merged position-list-style against the residual's exact truth table
+    # (the paper's MergeOpt/ScanCount view of the same query).  The rest
+    # densify per tile (sparse/run cells decompressed on the fly, never a
+    # store-wide expansion) into one gather + one cached kernel per group.
+    container_native = hasattr(store, "gather_events") and getattr(
+        store, "container_kinds", None
+    ) is not None
+    ck = store.container_kinds if container_native else None
+    swc = store.storage_words_cell if container_native else None
+    # with no compressed tile anywhere (containers off, or purely dense
+    # data) the legacy device-side gather path is byte-identical and keeps
+    # the working set on-device -- no host round trip per query
+    all_dense = not container_native or not (ck > CONT_DENSE).any()
+    for (rkey, live), (res, entries) in merged.items():
+        m = res.n_inputs
+        # exact truth tables exist for small residuals; _residual_key
+        # computed them already (rkey = (n_inputs, per-output tables))
+        tables = (
+            rkey[1]
+            if container_native and m <= _EXACT_CONST_MAX_INPUTS
+            else None
         )
-        got = np.asarray(jax.device_get(got), dtype=np.uint32)
-        if got.ndim == 1:
-            got = got[None]
-        out[np.asarray(live)[:, None], tiles[None, :]] = got.reshape(
-            len(live), tiles.size, tw
-        )
+        ev_rows, ev_pos, ev_wires = [], [], []
+        ev_out_tiles: list = []
+        dense_out_tiles: list = []
+        dense_gathers: list = []
+        n_ev = 0
+        for tiles, kept in entries:
+            stiles = sel[tiles] if restricted else tiles
+            kcols = np.asarray(kept, np.int64)
+            if tables is not None:
+                kinds_cell = ck[kcols[:, None], stiles[None, :]]
+                comp = (kinds_cell == CONT_SPARSE) | (kinds_cell == CONT_RUN)
+                cwords = swc[kcols[:, None], stiles[None, :]].sum(axis=0)
+                ev_mask = comp.all(axis=0) & (
+                    cwords <= CONTAINER_CROSSOVER * m * tw
+                )
+            else:
+                ev_mask = np.zeros(tiles.size, bool)
+            if ev_mask.any():
+                et = stiles[ev_mask]
+                ne = int(et.size)
+                cell, pos = store.gather_events(
+                    np.repeat(kcols, ne), np.tile(et, m)
+                )
+                ev_rows.append(n_ev + cell % ne)
+                ev_pos.append(pos)
+                ev_wires.append(cell // ne)
+                ev_out_tiles.append(tiles[ev_mask])
+                n_ev += ne
+                sw_ev = swc[kcols[:, None], et[None, :]]
+                ew = int(sw_ev.sum())
+                info["compressed_words_gathered"] += ew
+                info["dirty_words_gathered"] += ew
+                kc_ev = kinds_cell[:, ev_mask]
+                for kind, name in ((CONT_SPARSE, "sparse"), (CONT_RUN, "run")):
+                    info["words_by_kind"][name] += int(
+                        sw_ev[kc_ev == kind].sum()
+                    )
+            dmask = ~ev_mask
+            if dmask.any():
+                dt = stiles[dmask]
+                nd = int(dt.size)
+                # residual input order follows each signature's kept-column
+                # order, so tiles from different signatures feed the same
+                # kernel wires
+                if all_dense:
+                    # device path: index rows of the packed dirty array,
+                    # gather on-device right before the kernel launch
+                    dense_gathers.append(store.dirty_index[kept][:, dt])
+                    if container_native:
+                        info["words_by_kind"]["dense"] += m * nd * tw
+                else:
+                    cells = store.gather_cells(
+                        np.repeat(kcols, nd), np.tile(dt, m)
+                    )
+                    sw_dt = swc[kcols[:, None], dt[None, :]]
+                    kc_dt = ck[kcols[:, None], dt[None, :]]
+                    for kind, name in (
+                        (CONT_DENSE, "dense"),
+                        (CONT_SPARSE, "sparse"),
+                        (CONT_RUN, "run"),
+                    ):
+                        kw = int(sw_dt[kc_dt == kind].sum())
+                        info["words_by_kind"][name] += kw
+                        if kind != CONT_DENSE:
+                            info["compressed_words_gathered"] += kw
+                    dense_gathers.append(cells.reshape(m, nd * tw))
+                dense_out_tiles.append(tiles[dmask])
+        if n_ev:
+            got = evaluate_event_tiles(
+                np.concatenate(ev_rows),
+                np.concatenate(ev_pos),
+                np.concatenate(ev_wires),
+                n_ev,
+                tw,
+                tables,
+                m,
+            )
+            etiles = np.concatenate(ev_out_tiles)
+            out[np.asarray(live)[:, None], etiles[None, :]] = got
+            info["event_tiles"] += n_ev
+        if dense_gathers:
+            tiles = np.concatenate(dense_out_tiles)
+            if all_dense:
+                rows = np.concatenate(dense_gathers, axis=1)  # [m, nd]
+                gathered = store.dirty[rows.reshape(-1)].reshape(m, -1)
+            else:
+                gathered = jax.numpy.asarray(
+                    np.concatenate(dense_gathers, axis=1)
+                )
+            info["dirty_words_gathered"] += int(gathered.size)
+            info["densified_tiles"] += int(tiles.size)
+            info["launches"] += 1
+            got = run_circuit_cached(
+                gathered, res,
+                block_words=block_words, interpret=interpret, pallas=pallas,
+            )
+            got = np.asarray(jax.device_get(got), dtype=np.uint32)
+            if got.ndim == 1:
+                got = got[None]
+            out[np.asarray(live)[:, None], tiles[None, :]] = got.reshape(
+                len(live), tiles.size, tw
+            )
 
     if overflow_tiles:
         tiles = np.concatenate(overflow_tiles)

@@ -25,7 +25,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.bitmaps import n_words_for
-from repro.storage import TILE_DIRTY, TILE_ONE, TileStore
+from repro.storage import TileStore
 from repro.storage.tilestore import _popcount_words
 
 __all__ = ["DeltaStore", "base_tile_batch"]
@@ -35,24 +35,14 @@ def base_tile_batch(base: TileStore, cols: np.ndarray, tiles: np.ndarray
                     ) -> np.ndarray:
     """Base-store words for (col, tile) cells, uint32[M, tile_words].
 
-    THE one reconstruction of a tile's words from its class (all-zero /
-    all-one / dirty row; all-zero past the base range) -- the delta's
+    THE one reconstruction of a tile's words (all-zero / all-one /
+    container payload, all-zero past the base range) -- the delta's
     copy-on-write materialisation, the overlay's cardinality deltas and
-    the view refresh gather all read through here.
+    the view refresh gather all read through here.  Container-aware:
+    sparse/run tiles decompress individually, never store-wide.
     """
-    cols = np.asarray(cols, np.int64)
-    tiles = np.asarray(tiles, np.int64)
-    arr = np.zeros((cols.size, base.tile_words), np.uint32)
-    inb = np.nonzero(tiles < base.n_tiles)[0]
-    if inb.size:
-        cls = base.classes_word[cols[inb], tiles[inb]]
-        ones = inb[cls == TILE_ONE]
-        if ones.size:
-            arr[ones] = 0xFFFFFFFF
-        dirt = inb[cls >= TILE_DIRTY]
-        if dirt.size:
-            arr[dirt] = base._dirty_np[base.dirty_index[cols[dirt], tiles[dirt]]]
-    return arr
+    return base.gather_cells(np.asarray(cols, np.int64),
+                             np.asarray(tiles, np.int64))
 
 
 class DeltaStore:

@@ -34,7 +34,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bitmaps import n_words_for
-from repro.storage import TILE_DIRTY, TILE_ONE, TILE_ZERO, MemberStats, TileStore
+from repro.storage import (
+    CONT_DENSE,
+    CONT_NONE,
+    CONT_RUN,
+    CONT_SPARSE,
+    TILE_DIRTY,
+    TILE_ONE,
+    TILE_ZERO,
+    MemberStats,
+    TileStore,
+)
 from repro.storage.tiles import BlockStats
 from repro.storage.tilestore import _popcount_words, _signature_counts
 
@@ -89,7 +99,10 @@ class OverlayStore:
             index[pcols, ptiles] = idx_vals
             self._extra = np.ascontiguousarray(pwords[dirty])
         else:
+            pcols = ptiles = np.zeros(0, np.int64)
+            cls = np.zeros(0, np.uint8)
             self._extra = np.zeros((0, tw), np.uint32)
+        self._pcols, self._ptiles, self._pcls = pcols, ptiles, cls
         self._classes_word = classes
         self._dirty_index = index
         self._dirty_np_cache: np.ndarray | None = None
@@ -98,6 +111,9 @@ class OverlayStore:
         self._solid_cache: TileStore | None = None
         self._member_stats_cache: dict = {}
         self._card_cache: tuple | None = None
+        self._kinds_cache: np.ndarray | None = None
+        self._swc_cache: np.ndarray | None = None
+        self._patch_pos_cache: np.ndarray | None = None
 
     # -- geometry / identity ----------------------------------------------
     @property
@@ -133,6 +149,75 @@ class OverlayStore:
             else:
                 self._dirty_dev = self.base.dirty
         return self._dirty_dev
+
+    # -- container surface (what the container-native executor reads) -----
+    @property
+    def container_kinds(self) -> np.ndarray:
+        """Base container kinds with patched tiles as dense containers
+        (patched words are raw; compaction re-compresses them)."""
+        if self._kinds_cache is None:
+            kinds = np.zeros((self.n, self.n_tiles), np.uint8)
+            kinds[:, : self.base.n_tiles] = self.base.container_kinds
+            if self._pcols.size:
+                kinds[self._pcols, self._ptiles] = np.where(
+                    self._pcls >= TILE_DIRTY, CONT_DENSE, CONT_NONE
+                ).astype(np.uint8)
+            self._kinds_cache = kinds
+        return self._kinds_cache
+
+    @property
+    def storage_words_cell(self) -> np.ndarray:
+        if self._swc_cache is None:
+            swc = np.zeros((self.n, self.n_tiles), np.int32)
+            swc[:, : self.base.n_tiles] = self.base.storage_words_cell
+            if self._pcols.size:
+                swc[self._pcols, self._ptiles] = np.where(
+                    self._pcls >= TILE_DIRTY, self.tile_words, 0
+                )
+            self._swc_cache = swc
+        return self._swc_cache
+
+    @property
+    def _patch_pos(self) -> np.ndarray:
+        """int64[n, n_tiles]: row of ``_extra`` per patched-dirty cell."""
+        if self._patch_pos_cache is None:
+            pp = np.full((self.n, self.n_tiles), -1, np.int64)
+            dirty = self._pcls >= TILE_DIRTY
+            if dirty.any():
+                pp[self._pcols[dirty], self._ptiles[dirty]] = np.arange(
+                    int(dirty.sum())
+                )
+            self._patch_pos_cache = pp
+        return self._patch_pos_cache
+
+    def gather_cells(self, cols, tiles) -> np.ndarray:
+        """Materialised (base ⊕ delta) words of arbitrary cells -- patched
+        tiles from the overlay buffer, the rest straight off the base's
+        container packs (decompressed per cell, never store-wide)."""
+        cols = np.asarray(cols, np.int64)
+        tiles = np.asarray(tiles, np.int64)
+        out = np.zeros((cols.size, self.tile_words), np.uint32)
+        inb = tiles < self.n_tiles
+        if not inb.all():
+            sel = np.nonzero(inb)[0]
+            out[sel] = self.gather_cells(cols[sel], tiles[sel])
+            return out
+        cls = self._classes_word[cols, tiles]
+        out[cls == TILE_ONE] = 0xFFFFFFFF
+        pp = self._patch_pos[cols, tiles]
+        hit = pp >= 0
+        if hit.any():
+            out[hit] = self._extra[pp[hit]]
+        rest = (cls >= TILE_DIRTY) & ~hit
+        if rest.any():
+            out[rest] = self.base.gather_cells(cols[rest], tiles[rest])
+        return out
+
+    def gather_events(self, cols, tiles):
+        """Boundary events of compressed cells.  Patched tiles are never
+        sparse/run containers (see :attr:`container_kinds`), so every
+        requested cell lives in the base packs."""
+        return self.base.gather_events(cols, tiles)
 
     # -- dense-path surface ------------------------------------------------
     def densify(self) -> jax.Array:
@@ -211,6 +296,7 @@ class OverlayStore:
             (int(cnt), int((sig == TILE_ONE).sum()), int((sig >= TILE_DIRTY).sum()))
             for sig, cnt in zip(sigs, counts)
         )
+        kinds = self.container_kinds[idx]
         stats = MemberStats(
             n=int(idx.size),
             n_words=self.n_words,
@@ -220,6 +306,12 @@ class OverlayStore:
             dirty_words=dirty_tiles * self.tile_words,
             case3_tiles=int(((cls >= TILE_DIRTY).any(axis=0)).sum()),
             signatures=signatures,
+            container_tiles=(
+                int((kinds == CONT_DENSE).sum()),
+                int((kinds == CONT_SPARSE).sum()),
+                int((kinds == CONT_RUN).sum()),
+            ),
+            compressed_words=int(self.storage_words_cell[idx].sum()),
         )
         self._member_stats_cache[key] = stats
         return stats

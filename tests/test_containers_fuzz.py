@@ -1,0 +1,228 @@
+"""Differential fuzzing of the compressed-container storage engine.
+
+Hypothesis drives random expression trees (Threshold / Interval / Parity /
+Weighted composed with ``& | ~ -``) over random column mixes (dense,
+sparse, runny, all-zero, all-one, partial final tile) and asserts that
+every execution path is bit-identical to the numpy scancount oracle:
+
+  * every backend in ``ALGORITHMS`` on bare thresholds,
+  * every circuit-family backend on composite trees,
+  * container-enabled vs legacy (all-dense) stores,
+  * sharded vs unsharded indexes.
+
+``importorskip``-gated like ``test_properties.py`` -- the deterministic
+mirror of the core property lives in ``test_storage.py`` so environments
+without hypothesis still cover it.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.bitmaps import unpack  # noqa: E402
+from repro.core.threshold import ALGORITHMS  # noqa: E402
+from repro.query import BitmapIndex  # noqa: E402
+from repro.query.expr import (  # noqa: E402
+    And,
+    AndNot,
+    Col,
+    Interval,
+    Not,
+    Or,
+    Parity,
+    Threshold,
+    Weighted,
+)
+
+SETTINGS = dict(max_examples=20, deadline=None)
+TW = 8  # small tiles keep universes tiny; containers behave identically
+SPAN = TW * 32
+
+COLUMN_KINDS = ("dense", "sparse", "runny", "all_zero", "all_one", "mixed")
+
+
+def _column(rng, kind, r):
+    bits = np.zeros(r, bool)
+    if kind == "all_one":
+        bits[:] = True
+    elif kind == "dense":
+        bits[:] = rng.random(r) < 0.5
+    elif kind == "sparse":
+        k = int(rng.integers(1, max(2, r // 64)))
+        bits[rng.choice(r, min(k, r), replace=False)] = True
+    elif kind == "runny":
+        for _ in range(int(rng.integers(1, 5))):
+            a = int(rng.integers(0, r))
+            b = int(rng.integers(a + 1, r + 1))
+            bits[a:b] = True
+    elif kind == "mixed":
+        for t0 in range(0, r, SPAN):
+            bits[t0 : t0 + SPAN] = _column(
+                rng, COLUMN_KINDS[int(rng.integers(0, 4))], min(SPAN, r - t0)
+            )
+    return bits
+
+
+@st.composite
+def column_mix(draw, max_n=6, max_tiles=4):
+    n = draw(st.integers(2, max_n))
+    n_tiles = draw(st.integers(1, max_tiles))
+    tail = draw(st.sampled_from([0, 1, 37, SPAN // 2]))  # partial final tile
+    seed = draw(st.integers(0, 2**31 - 1))
+    kinds = draw(st.lists(st.sampled_from(COLUMN_KINDS), min_size=n, max_size=n))
+    r = n_tiles * SPAN + tail
+    rng = np.random.default_rng(seed)
+    bits = np.stack([_column(rng, k, r) for k in kinds])
+    return bits, kinds
+
+
+@st.composite
+def expression(draw, n, depth=2):
+    """A random query tree over columns c0..c{n-1}."""
+    if depth == 0 or draw(st.booleans()):
+        over = None
+        if draw(st.booleans()):
+            k = draw(st.integers(1, n))
+            over = tuple(
+                Col(f"c{i}")
+                for i in draw(
+                    st.permutations(range(n)).map(lambda p: sorted(p[:k]))
+                )
+            )
+        m = len(over) if over is not None else n
+        leaf = draw(st.sampled_from(["threshold", "interval", "parity", "weighted"]))
+        if leaf == "threshold":
+            return Threshold(draw(st.integers(0, m + 1)), over=over)
+        if leaf == "interval":
+            lo = draw(st.integers(0, m))
+            return Interval(lo, draw(st.integers(lo, m + 1)), over=over)
+        if leaf == "parity":
+            return Parity(over=over)
+        ws = tuple(draw(st.integers(0, 4)) for _ in range(m))
+        if not any(ws):
+            ws = (1,) + ws[1:]
+        return Weighted(ws, draw(st.integers(1, sum(ws) + 1)), over=over)
+    op = draw(st.sampled_from(["and", "or", "not", "andnot"]))
+    a = draw(expression(n, depth - 1))
+    if op == "not":
+        return ~a
+    b = draw(expression(n, depth - 1))
+    return {"and": a & b, "or": a | b, "andnot": a - b}[op]
+
+
+def oracle(q, bits):
+    """Numpy scancount evaluation of a query tree over dense bits [n, r]."""
+    def members(over):
+        if over is None:
+            return bits
+        return np.stack([oracle(m, bits) for m in over])
+
+    if isinstance(q, Col):
+        return bits[int(q.name[1:])]
+    if isinstance(q, Threshold):
+        return members(q.over).sum(0) >= q.t
+    if isinstance(q, Interval):
+        c = members(q.over).sum(0)
+        return (c >= q.lo) & (c <= q.hi)
+    if isinstance(q, Parity):
+        return members(q.over).sum(0) % 2 == 1
+    if isinstance(q, Weighted):
+        m = members(q.over)
+        return (m * np.asarray(q.weights)[:, None]).sum(0) >= q.t
+    if isinstance(q, And):
+        out = oracle(q.children[0], bits)
+        for c in q.children[1:]:
+            out = out & oracle(c, bits)
+        return out
+    if isinstance(q, Or):
+        out = oracle(q.children[0], bits)
+        for c in q.children[1:]:
+            out = out | oracle(c, bits)
+        return out
+    if isinstance(q, Not):
+        return ~oracle(q.child, bits)
+    if isinstance(q, AndNot):
+        return oracle(q.keep, bits) & ~oracle(q.drop, bits)
+    raise TypeError(type(q))
+
+
+def _indexes(bits):
+    """(label, index) pairs: container-enabled + legacy, each unsharded
+    and row-sharded."""
+    n = bits.shape[0]
+    out = []
+    for label, containers in (("containers", True), ("legacy", False)):
+        idx = BitmapIndex.from_dense(
+            jnp.asarray(bits), tile_words=TW, containers=containers
+        )
+        out.append((label, idx))
+        out.append(
+            (f"{label}-sharded", idx.shard(n_shards=min(3, idx.store.n_tiles)))
+        )
+    return out
+
+
+def _result_bits(res, r):
+    got = res.gather() if hasattr(res, "gather") else res
+    return np.asarray(unpack(got, r))
+
+
+@given(column_mix(), st.data())
+@settings(**SETTINGS)
+def test_expression_trees_differential(mix, data):
+    """Random trees: circuit-family backends + the planner's own choice are
+    bit-identical to the oracle on every store/shard variant."""
+    bits, _kinds = mix
+    n, r = bits.shape
+    q = data.draw(expression(n))
+    expect = oracle(q, bits)
+    for label, idx in _indexes(bits):
+        for backend in (None, "circuit", "tiled_fused"):
+            got = _result_bits(idx.execute(q, backend=backend), r)
+            np.testing.assert_array_equal(
+                got, expect, err_msg=f"{label} backend={backend} q={q.key()}"
+            )
+
+
+@given(column_mix(), st.data())
+@settings(**SETTINGS)
+def test_every_algorithm_bare_threshold_differential(mix, data):
+    """Bare thresholds: EVERY ``ALGORITHMS`` backend against the oracle on
+    container-enabled stores, sharded and unsharded."""
+    bits, _kinds = mix
+    n, r = bits.shape
+    t = data.draw(st.integers(1, n))
+    expect = bits.sum(0) >= t
+    q = Threshold(t)
+    for label, idx in _indexes(bits):
+        if label.startswith("legacy"):
+            continue  # legacy parity is covered by the tree test above
+        for alg in ALGORITHMS:
+            if alg == "wide_or" and t != 1:
+                continue
+            if alg == "wide_and" and t != n:
+                continue
+            got = _result_bits(idx.execute(q, backend=alg), r)
+            np.testing.assert_array_equal(
+                got, expect, err_msg=f"{label} alg={alg} t={t} n={n}"
+            )
+
+
+@given(column_mix())
+@settings(**SETTINGS)
+def test_container_store_roundtrip(mix):
+    """The container store densifies back to exactly the input bits, and
+    its cardinalities match, whatever the column mix."""
+    bits, _kinds = mix
+    idx = BitmapIndex.from_dense(jnp.asarray(bits), tile_words=TW)
+    legacy = BitmapIndex.from_dense(
+        jnp.asarray(bits), tile_words=TW, containers=False
+    )
+    np.testing.assert_array_equal(
+        np.asarray(idx.store.densify()), np.asarray(legacy.store.densify())
+    )
+    assert idx.store.cardinalities == tuple(bits.sum(1))
+    # compressed storage never exceeds the dense dirty pack
+    assert idx.store.storage_words() <= legacy.store.storage_words()

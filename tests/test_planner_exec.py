@@ -163,6 +163,73 @@ def _bench_clean_fraction_bits(n, n_tiles, clean_fraction, seed=0, span=64 * 32)
     return bits
 
 
+def test_container_cost_monotone_and_bounded_by_dense():
+    """Container-aware pricing: tiled_fused estimates grow monotonically
+    with container size and never exceed the same store's dense-pack
+    estimate (ratio == 1.0 when every container is dense)."""
+    from repro.core.planner import estimate_words_touched
+    from repro.storage import TileStore
+
+    n, n_tiles, span = 4, 8, 64 * 32
+    prev = None
+    for bits_per_tile in (1, 8, 32, 64, 120, 1024):
+        rng = np.random.default_rng(bits_per_tile)
+        bits = np.zeros((n, n_tiles * span), bool)
+        for i in range(n):
+            for t in range(n_tiles):
+                bits[i, t * span + rng.choice(span, bits_per_tile,
+                                              replace=False)] = True
+        store = TileStore.from_packed(pack(jnp.asarray(bits)))
+        legacy = TileStore.from_packed(pack(jnp.asarray(bits)),
+                                       containers=False)
+        stats = store.member_stats(None)
+        est = estimate_words_touched(
+            "tiled_fused", n, 1, n_words=stats.n_words, stats=stats
+        )
+        dense_est = estimate_words_touched(
+            "tiled_fused", n, 1, n_words=stats.n_words,
+            stats=legacy.member_stats(None),
+        )
+        assert est is not None and est <= dense_est, (bits_per_tile, est, dense_est)
+        assert stats.compressed_words <= stats.dirty_words
+        if prev is not None:
+            assert est >= prev, (bits_per_tile, est, prev)
+        prev = est
+    # fully dense: the container store prices exactly like the legacy one
+    assert est == dense_est
+
+
+def test_bench_words_touched_never_exceed_dense_estimate():
+    """BENCH_query.json regression guard (like the cf<=0.5 tiled_fused bug
+    fixed in PR 3): recorded words-touched for the tiled/container paths
+    must never exceed the dense-store estimate for the same query, the
+    density <= 1e-3 sweep points must show the >= 4x container reduction,
+    and density 0.5 must show no regression."""
+    import json
+    import pathlib
+
+    path = pathlib.Path(__file__).resolve().parent.parent / "BENCH_query.json"
+    if not path.exists():
+        pytest.skip("no BENCH_query.json checked in")
+    data = json.loads(path.read_text())
+    rows = data.get("sparsity_sweep")
+    if not rows:
+        pytest.skip("BENCH_query.json predates the sparsity sweep")
+    for row in rows:
+        assert row["words_touched"] <= row["dense_words"], row["density"]
+        assert row["words_touched"] <= row["words_touched_legacy"], row["density"]
+        assert row["memory_words"] <= row["memory_words_legacy"], row["density"]
+        if row["density"] <= 1e-3:
+            assert row["reduction"] >= 4.0, row
+        if row["density"] >= 0.5:
+            assert row["words_touched"] == row["words_touched_legacy"], row
+            assert row["memory_words"] == row["memory_words_legacy"], row
+    for row in data.get("clean_fraction_sweep", []):
+        tiled = row["backends"]["tiled_fused"]["words_touched"]
+        dense = row["backends"]["fused"]["words_touched"]
+        assert tiled <= dense, row["clean_fraction"]
+
+
 def test_plan_query_names_resolve():
     """plan_query outputs execute directly through the query layer."""
     bits, bm = _mk(10, 300, 0.3, seed=9)

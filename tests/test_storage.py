@@ -1,4 +1,5 @@
-"""Storage engine: TileStore classification/layout, tiled execution vs the
+"""Storage engine: TileStore classification/layout, compressed containers
+(sparse + run) round trips and crossover edges, tiled execution vs the
 scancount oracle, planner cost model, stats-cache fix, shim deprecation."""
 import warnings
 
@@ -8,14 +9,21 @@ import pytest
 
 from repro.core.bitmaps import pack, unpack
 from repro.core.circuits import build_interval_circuit, build_threshold_circuit
+from repro.core.threshold import ALGORITHMS
 from repro.query import And, BitmapIndex, Col, Interval, Not, Parity, Threshold
 from repro.storage import (
+    CONT_DENSE,
+    CONT_NONE,
+    CONT_RUN,
+    CONT_SPARSE,
     TILE_DIRTY,
     TILE_ONE,
     TILE_RUN,
     TILE_ZERO,
     TileStore,
+    run_max_intervals,
     run_tiled_circuit,
+    sparse_max_positions,
 )
 
 TW = 64
@@ -164,6 +172,225 @@ def test_member_stats_per_subset_not_index_mean():
     assert store.member_stats([1]).clean_fraction == 0.0
     assert 0.0 < store.member_stats(None).clean_fraction < 1.0
     assert store.member_stats([0]).dirty_words == 0
+
+
+# ---------------------------------------------------------------------------
+# Compressed containers (sparse + run)
+# ---------------------------------------------------------------------------
+
+
+def _store_of(bits, r=None, containers=True, tile_words=TW):
+    return TileStore.from_packed(
+        pack(jnp.asarray(bits)), tile_words=tile_words,
+        r=r if r is not None else bits.shape[1], containers=containers,
+    )
+
+
+def test_container_classification_crossover_edges():
+    """Kind choice at the exact thresholds: popcount == sparse_max is still
+    sparse, one more scattered bit tips dense; 1- and 2-interval tiles are
+    run containers; run-ineligible interval counts fall through."""
+    r = SPAN
+    smax = sparse_max_positions(TW)  # 128 positions at TW=64
+    rmax = run_max_intervals(TW)
+    rows = []
+    rng = np.random.default_rng(0)
+    at = np.zeros(r, bool)
+    at[rng.choice(np.arange(0, r, 2), smax, replace=False)] = True  # no runs>1bit
+    rows.append(at)  # popcount exactly at the threshold -> sparse
+    over = np.zeros(r, bool)
+    over[rng.choice(np.arange(0, r, 2), smax + 1, replace=False)] = True
+    rows.append(over)  # one past the threshold, many intervals -> dense
+    single = np.zeros(r, bool)
+    single[300:2000] = True
+    rows.append(single)  # one interval -> run
+    double = np.zeros(r, bool)
+    double[10:800] = True
+    double[1200:1900] = True
+    rows.append(double)  # two intervals -> run
+    toothy = np.zeros(r, bool)
+    toothy[: (rmax + 1) * 2 : 2] = True  # rmax+1 intervals, tiny popcount
+    rows.append(toothy)  # run-ineligible but sparse-eligible -> sparse
+    store = _store_of(np.stack(rows))
+    kinds = store.container_kinds[:, 0]
+    assert kinds.tolist() == [
+        CONT_SPARSE, CONT_DENSE, CONT_RUN, CONT_RUN, CONT_SPARSE
+    ]
+    # the decompressed store is bit-identical to the input
+    np.testing.assert_array_equal(
+        np.asarray(store.densify()), np.asarray(pack(jnp.asarray(np.stack(rows))))
+    )
+    # storage accounting: sparse = ceil(p/2) words, run = 1 word / interval
+    cells = store.storage_words_cell[:, 0]
+    assert cells[0] == (smax + 1) // 2 and cells[1] == TW
+    assert cells[2] == 1 and cells[3] == 2
+    assert cells[4] == (rmax + 2) // 2  # rmax + 1 positions, sparse-coded
+
+
+def test_container_roundtrip_and_densify_parity():
+    """Container and legacy stores densify identically on mixed data with a
+    partial final tile; compressed storage never exceeds the dense pack."""
+    bits = _tiled_bits(6, 6, 0.5, seed=31, tail_bits=123)
+    sparse_rows = np.zeros((2, bits.shape[1]), bool)
+    sparse_rows[0, ::997] = True
+    sparse_rows[1, 100:5000] = True
+    bits = np.vstack([bits, sparse_rows])
+    store = _store_of(bits)
+    legacy = _store_of(bits, containers=False)
+    assert store.containers and not legacy.containers
+    np.testing.assert_array_equal(
+        np.asarray(store.densify()), np.asarray(legacy.densify())
+    )
+    assert store.cardinalities == legacy.cardinalities
+    assert store.storage_words() <= legacy.storage_words()
+    assert (legacy.container_kinds[legacy.classes_word >= TILE_DIRTY]
+            == CONT_DENSE).all()
+    # the legacy densified-dirty surface still covers every dirty tile
+    np.testing.assert_array_equal(
+        np.asarray(store.dirty), np.asarray(legacy.dirty)
+    )
+    # slicing preserves container packs without reclassifying
+    sliced = store.slice_tiles(1, 4)
+    np.testing.assert_array_equal(
+        np.asarray(sliced.densify()),
+        np.asarray(store.densify())[:, TW : 4 * TW],
+    )
+    np.testing.assert_array_equal(
+        sliced.container_kinds, store.container_kinds[:, 1:4]
+    )
+    back = TileStore.concat_tiles(
+        [store.slice_tiles(0, 1), sliced, store.slice_tiles(4, store.n_tiles)],
+        n_words=store.n_words, r=store.r,
+    )
+    np.testing.assert_array_equal(
+        np.asarray(back.densify()), np.asarray(store.densify())
+    )
+    np.testing.assert_array_equal(back.container_kinds, store.container_kinds)
+
+
+def test_apply_tile_updates_reclassifies_containers():
+    """Compaction picks the cheapest container per touched tile: a sparse
+    tile mutated dense flips kind, clearing it back flips it back."""
+    r = 4 * SPAN
+    bits = np.zeros((2, r), bool)
+    bits[0, ::1009] = True  # sparse everywhere
+    bits[1] = np.random.default_rng(5).random(r) < 0.5
+    store = _store_of(bits)
+    assert store.container_kinds[0, 1] == CONT_SPARSE
+    dense_tile = np.asarray(
+        pack(jnp.asarray(np.random.default_rng(6).random(SPAN) < 0.5))
+    ).astype(np.uint32)
+    upd = store.apply_tile_updates({0: {1: dense_tile}})
+    assert upd.container_kinds[0, 1] == CONT_DENSE
+    np.testing.assert_array_equal(
+        np.asarray(upd.densify())[0, TW : 2 * TW], dense_tile
+    )
+    sparse_tile = np.zeros(TW, np.uint32)
+    sparse_tile[3] = 0b1001
+    back = upd.apply_tile_updates({0: {1: sparse_tile}})
+    assert back.container_kinds[0, 1] == CONT_SPARSE
+    run_tile = np.zeros(TW, np.uint32)
+    run_tile[:20] = 0xFFFFFFFF
+    runb = back.apply_tile_updates({0: {1: run_tile}})
+    assert runb.container_kinds[0, 1] == CONT_RUN
+    cleared = runb.apply_tile_updates({0: {1: np.zeros(TW, np.uint32)}})
+    assert cleared.container_kinds[0, 1] == CONT_NONE
+    assert cleared.classes_word[0, 1] == TILE_ZERO
+    # cardinality tracked by popcount deltas through every transition
+    assert cleared.cardinalities[0] == store.cardinalities[0] - int(
+        bits[0, SPAN : 2 * SPAN].sum()
+    )
+
+
+def test_query_results_stored_as_containers():
+    """add_column compresses results: the paper's 'the result is again a
+    bitmap which can be further processed' loop stays compressed."""
+    bits = np.zeros((4, 4 * SPAN), bool)
+    bits[0, ::501] = True
+    bits[1, ::703] = True
+    bits[2, 100:200] = True
+    bits[3, SPAN:] = True
+    idx = BitmapIndex.from_dense(jnp.asarray(bits))
+    res = idx.execute(Threshold(2))
+    idx2 = idx.add_column("hot", res)
+    kinds = idx2.store.container_kinds[-1]
+    dirty = idx2.store.classes_word[-1] >= TILE_DIRTY
+    assert dirty.any()
+    assert (kinds[dirty] != CONT_DENSE).any()  # stored compressed
+    np.testing.assert_array_equal(
+        np.asarray(idx2.column("hot")), np.asarray(res)
+    )
+
+
+def test_container_native_execution_differential():
+    """Deterministic mirror of tests/test_containers_fuzz.py: mixed column
+    kinds, every ALGORITHMS backend on bare thresholds plus circuit-family
+    on a composite, container vs legacy vs sharded -- all bit-identical to
+    the numpy oracle."""
+    rng = np.random.default_rng(17)
+    span8 = 8 * 32
+    n, r = 5, 4 * span8 + 37
+    bits = np.zeros((n, r), bool)
+    bits[0, ::131] = True  # sparse
+    bits[1, 40:500] = True  # runny
+    bits[2] = rng.random(r) < 0.5  # dense
+    bits[3, :span8] = True  # clean tile + zeros
+    bits[4, ::2] = True  # toothy (run-ineligible, sparse-ineligible)
+    counts = bits.sum(0)
+    variants = []
+    for containers in (True, False):
+        idx = BitmapIndex.from_dense(
+            jnp.asarray(bits), tile_words=8, containers=containers
+        )
+        variants += [(containers, False, idx), (containers, True, idx.shard(n_shards=3))]
+    for t in (1, 2, n):
+        expect = counts >= t
+        for containers, sharded, idx in variants:
+            for alg in ALGORITHMS:
+                if (alg == "wide_or") != (t == 1) and alg == "wide_or":
+                    continue
+                if alg == "wide_and" and t != n:
+                    continue
+                res = idx.execute(Threshold(t), backend=alg)
+                got = res.gather() if sharded else res
+                np.testing.assert_array_equal(
+                    np.asarray(unpack(got, r)), expect,
+                    err_msg=f"alg={alg} t={t} containers={containers} sharded={sharded}",
+                )
+    q = And(Interval(2, 4), Not(Col("c1"))) | Parity(over=(Col("c0"), Col("c2")))
+    expect = ((counts >= 2) & (counts <= 4) & ~bits[1]) | (
+        bits[0] ^ bits[2]
+    )
+    for containers, sharded, idx in variants:
+        for backend in (None, "circuit", "tiled_fused"):
+            res = idx.execute(q, backend=backend)
+            got = res.gather() if sharded else res
+            np.testing.assert_array_equal(
+                np.asarray(unpack(got, r)), expect,
+                err_msg=f"composite containers={containers} sharded={sharded} {backend}",
+            )
+
+
+def test_event_path_engages_and_reduces_words():
+    """On sparse data the executor resolves tiles container-natively (no
+    densified gather) and touches far fewer words than the legacy store."""
+    rng = np.random.default_rng(23)
+    n, n_tiles = 6, 16
+    r = n_tiles * SPAN
+    bits = rng.random((n, r)) < (20 / SPAN)  # ~20 bits per tile per column
+    circ = build_threshold_circuit(n, 1, "ssum")
+    store = _store_of(bits)
+    legacy = _store_of(bits, containers=False)
+    out, info = run_tiled_circuit(store, circ)
+    out2, info2 = run_tiled_circuit(legacy, circ)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))
+    assert info["event_tiles"] > 0
+    assert info["compressed_words_gathered"] > 0
+    assert info2["event_tiles"] == 0
+    assert info["dirty_words_gathered"] * 4 <= info2["dirty_words_gathered"], (
+        info["dirty_words_gathered"], info2["dirty_words_gathered"]
+    )
+    assert info["words_by_kind"]["sparse"] > 0
 
 
 # ---------------------------------------------------------------------------
