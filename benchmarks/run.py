@@ -12,6 +12,9 @@ Prints ``name,value,derived`` CSV lines.  Sections:
               compiled-circuit cache (repro.query)
   stream   -- streaming update engine: delta apply + view refresh vs full
               rebuild, compaction amortization (repro.stream; smoke sizes)
+  persist  -- on-disk format: snapshot size vs density, cold-load-to-
+              first-query vs rebuild, WAL replay throughput (repro.persist;
+              scratch snapshots in a temp dir, removed on exit)
   roofline -- three-term roofline per dry-run cell (deliverable g; requires
               artifacts/dryrun from ``python -m repro.launch.dryrun``)
 """
@@ -22,7 +25,7 @@ import traceback
 
 
 def main() -> None:
-    sections = sys.argv[1:] or ["table5", "table7", "fig3", "table10", "heatmap", "kernel", "weighted", "query", "stream", "roofline"]
+    sections = sys.argv[1:] or ["table5", "table7", "fig3", "table10", "heatmap", "kernel", "weighted", "query", "stream", "persist", "roofline"]
     failures = 0
     for section in sections:
         print(f"# --- {section} ---")
@@ -61,6 +64,10 @@ def main() -> None:
                 rows = mod.run()
             elif section == "stream":
                 from benchmarks import stream_bench as mod
+
+                rows = mod.run(smoke=True)
+            elif section == "persist":
+                from benchmarks import persist_bench as mod
 
                 rows = mod.run(smoke=True)
             elif section == "roofline":

@@ -240,13 +240,31 @@ def plan_threshold(
             "N huge: per-(N,T) circuit tabulation is infeasible; streaming "
             "counters keep an O(chunk x r) working set (paper section 6)",
         )
-    if t <= 3:
-        return plan("looped", "T very small: LOOPED is O(NT) ops and wins (paper 5.10)")
     if not on_device and density is not None and density < 1e-3 and t >= 0.9 * n:
         return plan(
             "dsk",
             "sparse data with T~N: pruning algorithms win on the host (paper 5.8.3)",
         )
+    if stats is not None and cands:
+        # cost-model path: the plan honors its own candidate ranking.
+        # (Previously this fell through to the scalar-rule ssum/fused
+        # default, picking ssum at ~10x the priced cost of fused whenever
+        # the fused kernel wasn't flagged "available" -- but the fused
+        # backend is runnable everywhere: Pallas on TPU, interpret/XLA
+        # elsewhere, and BENCH_query wall times track the estimates.)
+        # tiled_fused stays behind the _TILED_ADVANTAGE gate above -- its
+        # estimate omits host gather/scatter bookkeeping, so it must win
+        # by a margin, not by a hair.
+        eligible = [kv for kv in cands if kv[0] != "tiled_fused"]
+        if eligible:
+            best, cost = min(eligible, key=lambda kv: kv[1])
+            return plan(
+                best,
+                f"min-cost candidate: ~{int(cost)} words touched "
+                "(cost model over member tile statistics)",
+            )
+    if t <= 3:
+        return plan("looped", "T very small: LOOPED is O(NT) ops and wins (paper 5.10)")
     if fused_available:
         return plan("fused", "default: sideways-sum adder, fused kernel (paper 5.10 + ours)")
     return plan("ssum", "default: sideways-sum adder circuit via XLA (paper 5.10)")

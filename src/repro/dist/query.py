@@ -577,3 +577,24 @@ class ShardedBitmapIndex:
 
         res = self.execute(query, **kw)
         return int(sum(int(cardinality(s)) for s in res.shards))
+
+    # -- persistence -------------------------------------------------------
+    def save(self, dirpath) -> dict:
+        """Write one ``.bmsnap`` per shard plus the shard map
+        (``repro.persist.shards``); returns the shard-map metadata.  Each
+        device can later load ONLY its own file via
+        :func:`repro.persist.load_shard`."""
+        from repro.persist import save_sharded
+
+        return save_sharded(self, dirpath)
+
+    @classmethod
+    def load(cls, dirpath, *, mesh=None, axis: str = "data",
+             to_device: bool = False,
+             verify: bool = False) -> "ShardedBitmapIndex":
+        """Rebuild a saved sharded index, shard files mapped in place --
+        no gather, no reclassification."""
+        from repro.persist import load_sharded
+
+        return load_sharded(dirpath, mesh=mesh, axis=axis,
+                            to_device=to_device, verify=verify)

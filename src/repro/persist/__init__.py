@@ -1,0 +1,41 @@
+"""`repro.persist`: versioned on-disk index format, WAL + snapshot recovery.
+
+  * :mod:`~repro.persist.format` -- the ``.bmsnap`` framing: header,
+    checksummed raw sections, JSON manifest footer;
+  * :mod:`~repro.persist.snapshot` -- ``save``/``load`` of one TileStore /
+    BitmapIndex with zero-copy ``np.memmap`` reconstruction;
+  * :mod:`~repro.persist.shards` -- one file per tile-range shard for
+    ``ShardedBitmapIndex`` (each device loads only its own);
+  * :mod:`~repro.persist.wal` -- the ``.bmwal`` write-ahead log of
+    streaming mutation batches (per-record CRC, monotone versions);
+  * :mod:`~repro.persist.tiers` -- ``PagedTileStore``, the host-resident
+    read tier that pages only plan-touched tiles onto the device.
+
+High-level entry points live on the owning classes: ``BitmapIndex.save``
+/ ``.load``, ``ShardedBitmapIndex.save`` / ``.load``, and
+``StreamingIndex.checkpoint`` / ``.recover``.
+"""
+from .format import FormatError, read_manifest, schema_digest, verify_snapshot
+from .shards import load_shard, load_sharded, read_shard_map, save_sharded
+from .snapshot import load, load_index, save, snapshot_info
+from .tiers import PagedTileStore
+from .wal import WriteAheadLog, query_from_obj, query_to_obj
+
+__all__ = [
+    "FormatError",
+    "PagedTileStore",
+    "WriteAheadLog",
+    "load",
+    "load_index",
+    "load_shard",
+    "load_sharded",
+    "query_from_obj",
+    "query_to_obj",
+    "read_manifest",
+    "read_shard_map",
+    "save",
+    "save_sharded",
+    "schema_digest",
+    "snapshot_info",
+    "verify_snapshot",
+]

@@ -314,6 +314,23 @@ class BitmapIndex:
         )
         return cls(names=sharded.names, _store=store)
 
+    # -- persistence -------------------------------------------------------
+    def save(self, path) -> dict:
+        """Write a ``.bmsnap`` snapshot (``repro.persist``); returns the
+        manifest.  ``BitmapIndex.load(path)`` reconstructs the index over
+        ``np.memmap`` views -- no rebuild, no classification pass."""
+        from repro.persist import save
+
+        return save(self, path)
+
+    @classmethod
+    def load(cls, path, *, to_device: bool = False,
+             verify: bool = False) -> "BitmapIndex":
+        """Reconstruct a saved index; see :func:`repro.persist.load_index`."""
+        from repro.persist import load_index
+
+        return load_index(path, to_device=to_device, verify=verify)
+
     # -- statistics --------------------------------------------------------
     def stats(self, tile_words: int | None = None, refresh: bool = False) -> IndexStats:
         """Planner statistics at the requested tile granularity.

@@ -118,6 +118,42 @@ class ServeEngine:
             self._occ_now, self._near_now = set(occ), set(near)
         return self._slot_stream.index()
 
+    def snapshot_slot_index(self, dirpath) -> dict:
+        """Checkpoint the slot-state criteria index to ``dirpath`` via
+        ``repro.persist``: snapshot + WAL, materialized selection views
+        included.  A later engine (or replica) warm-starts from it with
+        :meth:`warm_start_slot_index` instead of rebuilding."""
+        self.slot_index()  # ensure the streaming index exists
+        stream = self._slot_stream
+        if stream.durable_dir is None:
+            stream.attach_durable(dirpath)
+        return stream.checkpoint()
+
+    def warm_start_slot_index(self, dirpath) -> bool:
+        """Adopt a checkpointed slot index (memmap load + WAL replay)
+        instead of building one from live request state.  Returns False --
+        leaving the engine to build fresh on first use -- when there is no
+        usable snapshot or its slot universe doesn't match this engine."""
+        from pathlib import Path
+
+        if not (Path(dirpath) / "index.json").exists():
+            return False
+        stream = StreamingIndex.recover(dirpath, mesh=self.mesh)
+        if stream.r != self.slots or not {"occupied", "near_limit"} <= set(
+            stream.names
+        ):
+            return False
+        self._slot_stream = stream
+        # resync the change-detection mirrors from the recovered columns
+        occ, near = [], []
+        for name, acc in (("occupied", occ), ("near_limit", near)):
+            out = stream.execute(Col(name))
+            if hasattr(out, "gather"):
+                out = out.gather()
+            acc.extend(to_positions_np(out).tolist())
+        self._occ_now, self._near_now = set(occ), set(near)
+        return True
+
     def _commit_slot_state(self) -> None:
         """Fold EVERY slot change since the last commit -- completions,
         admissions, positions crossing the margin -- into one batched index

@@ -246,7 +246,11 @@ def run_tiled_circuit(
     # with no compressed tile anywhere (containers off, or purely dense
     # data) the legacy device-side gather path is byte-identical and keeps
     # the working set on-device -- no host round trip per query
-    all_dense = not container_native or not (ck > CONT_DENSE).any()
+    # paged stores (repro.persist.tiers) must never trigger the whole-pack
+    # device upload: their point is touching only the gathered tiles
+    all_dense = not getattr(store, "paged", False) and (
+        not container_native or not (ck > CONT_DENSE).any()
+    )
     for (rkey, live), (res, entries) in merged.items():
         m = res.n_inputs
         # exact truth tables exist for small residuals; _residual_key

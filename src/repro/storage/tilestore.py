@@ -431,6 +431,17 @@ class TileStore:
         self._packs = p
 
     @property
+    def packs(self) -> dict:
+        """The store-wide per-kind packs + ordinal tables (assembled lazily):
+        ``dense_pack``/``sparse_pack``/``sparse_bounds``/``run_pack``/
+        ``run_bounds`` and the int64[N, n_tiles] ``dense_index``/
+        ``sparse_index``/``run_index`` tables.  This is the snapshot
+        surface: ``repro.persist`` serializes exactly these arrays and
+        :meth:`from_arrays` rebuilds the store from them."""
+        self._assemble_packs()
+        return self._packs
+
+    @property
     def storage_words_cell(self) -> np.ndarray:
         """int32[N, n_tiles]: uint32-word-equivalents stored per (column,
         tile) cell -- 0 clean, ``tile_words`` dense, ``ceil(p/2)`` sparse,
@@ -573,6 +584,98 @@ class TileStore:
         bits = jnp.asarray(bits)
         return cls.from_packed(pack(bits), tile_words=tile_words,
                                r=bits.shape[-1], containers=containers)
+
+    @classmethod
+    def from_arrays(cls, arrays, *, tile_words: int, n_words: int, r: int,
+                    containers: bool = True) -> "TileStore":
+        """Trusted zero-copy constructor from the :attr:`packs` surface.
+
+        ``arrays`` is a mapping holding ``classes`` / ``kinds`` (uint8
+        [N, n_tiles]), ``cardinalities`` (int64 [N]) and the eight pack /
+        ordinal-table arrays exactly as :attr:`packs` lays them out.  The
+        arrays are adopted as-is (they may be read-only ``np.memmap``
+        views over a snapshot file): per-column payloads become slices of
+        the store-wide packs -- the per-column concatenation order of
+        ``_assemble_packs`` guarantees contiguity -- so nothing larger
+        than the offset rebases is copied.  Classification is NOT re-run;
+        callers must hand back arrays a ``TileStore`` produced.
+        """
+        classes = np.asarray(arrays["classes"])
+        kinds = np.asarray(arrays["kinds"])
+        cards = np.asarray(arrays["cardinalities"], np.int64)
+        if classes.ndim != 2 or classes.shape != kinds.shape:
+            raise ValueError(
+                f"classes/kinds must both be uint8[N, n_tiles], got "
+                f"{classes.shape} vs {kinds.shape}"
+            )
+        n, n_tiles = classes.shape
+        if n_tiles != (int(n_words) + int(tile_words) - 1) // int(tile_words):
+            raise ValueError(
+                f"{n_tiles} tiles inconsistent with n_words={n_words} at "
+                f"tile_words={tile_words}"
+            )
+        if cards.shape != (n,):
+            raise ValueError(f"expected {n} cardinalities, got {cards.shape}")
+        dense_pack = arrays["dense_pack"]
+        sparse_pack, sb = arrays["sparse_pack"], arrays["sparse_bounds"]
+        run_pack, rb = arrays["run_pack"], arrays["run_bounds"]
+        cols = []
+        d0 = s0 = r0 = 0  # per-kind tile ordinals consumed so far
+        for i in range(n):
+            ki = kinds[i]
+            dn = int((ki == CONT_DENSE).sum())
+            sn = int((ki == CONT_SPARSE).sum())
+            rn = int((ki == CONT_RUN).sum())
+            cols.append(_Column(
+                classes=classes[i],
+                kinds=ki,
+                dense=dense_pack[d0:d0 + dn],
+                spos=sparse_pack[sb[s0]:sb[s0 + sn]],
+                soff=np.asarray(sb[s0:s0 + sn + 1], np.int64) - sb[s0],
+                runs=run_pack[rb[r0]:rb[r0 + rn]],
+                roff=np.asarray(rb[r0:r0 + rn + 1], np.int64) - rb[r0],
+                cardinality=int(cards[i]),
+            ))
+            d0 += dn
+            s0 += sn
+            r0 += rn
+        if d0 != len(dense_pack) or sb[s0] != len(sparse_pack) \
+                or rb[r0] != len(run_pack):
+            raise ValueError("pack sizes inconsistent with the kind arrays")
+        store = object.__new__(cls)
+        store._cols = tuple(cols)
+        store.tile_words = int(tile_words)
+        store.n_words = int(n_words)
+        store.r = int(r)
+        store.containers = bool(containers) and containers_supported(tile_words)
+        store.n_tiles = n_tiles
+        store._classes_word = classes
+        store._kinds_cache = kinds
+        store._dirty_np_cache = None
+        store._dirty_index_cache = None
+        store._dirty_dev = None
+        store._packs = {
+            "dense_index": np.asarray(arrays["dense_index"]),
+            "sparse_index": np.asarray(arrays["sparse_index"]),
+            "run_index": np.asarray(arrays["run_index"]),
+            "dense_pack": np.asarray(dense_pack),
+            "sparse_pack": np.asarray(sparse_pack),
+            "sparse_bounds": np.asarray(sb),
+            "run_pack": np.asarray(run_pack),
+            "run_bounds": np.asarray(rb),
+        }
+        store._storage_words_cell = None
+        store._dense = None
+        store._refined_classes = None
+        store._col_stats = None
+        store._member_stats_cache = {}
+        if not (kinds > CONT_DENSE).any():
+            # all-dense layout: the densified dirty pack IS the dense pack
+            # (same per-column tile order), so the legacy device path reads
+            # the memmap directly -- no assembly copy
+            store._dirty_np_cache = store._packs["dense_pack"]
+            store._dirty_index_cache = store._packs["dense_index"]
+        return store
 
     def _classify_row(self, packed_row) -> _Column:
         row = np.asarray(jax.device_get(jnp.asarray(packed_row, WORD_DTYPE)),

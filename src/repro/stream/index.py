@@ -92,7 +92,8 @@ class MaterializedView:
 class StreamingIndex:
     """An updatable view over a (Sharded)BitmapIndex plus delta buffers."""
 
-    def __init__(self, index, *, policy: CompactionPolicy | None = None):
+    def __init__(self, index, *, policy: CompactionPolicy | None = None,
+                 durable_dir=None):
         from repro.dist.query import ShardedBitmapIndex
 
         self.policy = policy or CompactionPolicy()
@@ -104,7 +105,30 @@ class StreamingIndex:
         self._version = 0
         self._overlay_cache: tuple | None = None  # (version, index)
         self.compactions = 0
+        #: durability state: a WAL every mutation batch appends to before
+        #: applying, plus the directory checkpoints land in.  ``None``
+        #: keeps the index purely in-memory (the default).
+        self._wal = None
+        self._dir = None
+        self._replaying = False  # True while recover() re-applies the log
         self._reset_deltas()
+        if durable_dir is not None:
+            self.attach_durable(durable_dir)
+
+    def attach_durable(self, path) -> None:
+        """Start logging every mutation batch to ``path/wal.bmwal``.
+
+        A directory with no checkpoint yet gets one immediately, so
+        recovery always has a base snapshot to replay the WAL against."""
+        from pathlib import Path
+
+        from repro.persist.wal import WriteAheadLog
+
+        self._dir = Path(path)
+        self._dir.mkdir(parents=True, exist_ok=True)
+        self._wal = WriteAheadLog(self._dir / "wal.bmwal")
+        if not (self._dir / "index.json").exists():
+            self.checkpoint()
 
     # -- construction ------------------------------------------------------
     @classmethod
@@ -235,6 +259,14 @@ class StreamingIndex:
         cols = np.repeat(np.asarray([s for s, _, _ in parts], np.int64), sizes)
         pos = np.concatenate([p for _, p, _ in parts])
         on = np.repeat(np.asarray([o for _, _, o in parts], bool), sizes)
+        if self._wal is not None and not self._replaying:
+            self._wal.append_update(cols, pos, on)
+        self._apply_update_arrays(cols, pos, on)
+
+    def _apply_update_arrays(self, cols: np.ndarray, pos: np.ndarray,
+                             on: np.ndarray) -> None:
+        """Route one validated (cols, pos, on) batch to the owning shards
+        -- the shared tail of :meth:`update` and WAL replay."""
         touched: dict[int, set] = {}
         toffs = self._tile_offsets()
         boffs = self._bit_offsets()
@@ -278,6 +310,10 @@ class StreamingIndex:
                 )
             arr = np.zeros((self.n, given.shape[1]), bool)
             arr[data_slots] = given
+        if self._wal is not None and not self._replaying:
+            # log only the data-column rows: the view columns' appended
+            # bits are recomputed on replay exactly like they were live
+            self._wal.append_rows(arr[data_slots])
         toffs = self._tile_offsets()
         shard = len(self._deltas) - 1
         tiles = self._deltas[shard].append_rows(arr)
@@ -381,6 +417,8 @@ class StreamingIndex:
         # the view must keep meaning what it meant when registered, even
         # after more (view) columns join the schema
         q = bind_members(as_query(query), self._names)
+        if self._wal is not None and not self._replaying:
+            self._wal.append_materialize(name, q)
         self.refresh()
         self.compact(force=True)
         res = self._base.execute(q)
@@ -555,3 +593,138 @@ class StreamingIndex:
         self._version += 1
         self.compactions += 1
         return True
+
+    # -- durability (repro.persist) ----------------------------------------
+    @property
+    def durable_dir(self):
+        return self._dir
+
+    @property
+    def wal_version(self) -> int:
+        """Version of the last logged mutation batch (0 when not durable)."""
+        return self._wal.last_version if self._wal is not None else 0
+
+    def checkpoint(self) -> dict:
+        """Fold the delta and write a fresh snapshot + rotate the WAL.
+
+        After the checkpoint the directory alone reproduces the index:
+        the snapshot holds every column (materialized views included, as
+        real columns), ``index.json`` holds the view definitions and the
+        WAL version the snapshot covers, and the WAL is emptied (its
+        version counter stays monotone so later records sort after the
+        snapshot).  Requires ``durable_dir``."""
+        import json
+
+        if self._dir is None:
+            raise RuntimeError(
+                "checkpoint() needs a durable index: pass durable_dir= to "
+                "StreamingIndex"
+            )
+        from repro.persist import save, save_sharded
+        from repro.persist.wal import query_to_obj
+
+        self.refresh()
+        self.compact(force=True)
+        views_meta = [
+            {"name": v.name, "query": query_to_obj(v.query)}
+            for v in self._views.values()  # registration order
+        ]
+        meta = {
+            "sharded": self._sharded,
+            "wal_version": int(self._wal.last_version),
+            "names": list(self._names),
+            "views": views_meta,
+        }
+        extra = {"wal_version": meta["wal_version"], "views": views_meta}
+        if self._sharded:
+            save_sharded(self._base, self._dir, extra=extra)
+        else:
+            save(self._base, self._dir / "snapshot.bmsnap", extra=extra)
+        (self._dir / "index.json").write_text(
+            json.dumps(meta, indent=2, sort_keys=True)
+        )
+        self._wal.rotate()
+        return meta
+
+    @classmethod
+    def recover(cls, path, *, policy: CompactionPolicy | None = None,
+                mesh=None) -> "StreamingIndex":
+        """Rebuild a durable index from its directory: load the snapshot
+        (memmap, no copy), re-register the materialized views from the
+        manifest, then replay every WAL record after the snapshot's
+        version.  A torn record at the log's tail (the crash case) is
+        truncated away; the recovered index answers bit-identically to
+        the never-crashed one up to the last intact batch."""
+        import json
+        from pathlib import Path
+
+        from repro.persist import load_index, load_sharded
+        from repro.persist.wal import (
+            APPEND,
+            MATERIALIZE,
+            UPDATE,
+            WriteAheadLog,
+            query_from_obj,
+        )
+
+        d = Path(path)
+        meta = json.loads((d / "index.json").read_text())
+        if meta["sharded"]:
+            base = load_sharded(d, mesh=mesh)
+        else:
+            base = load_index(d / "snapshot.bmsnap")
+        self = cls(base, policy=policy)
+        self._dir = d
+        self._rebuild_views(
+            [(v["name"], query_from_obj(v["query"])) for v in meta["views"]]
+        )
+        wal = WriteAheadLog(d / "wal.bmwal")
+        snap_version = int(meta["wal_version"])
+        # the rotated log restarts empty; keep new appends sorting after
+        # the snapshot even then
+        wal.last_version = max(wal.last_version, snap_version)
+        self._replaying = True
+        try:
+            for rec in wal.replay(after_version=snap_version):
+                if rec["kind"] == UPDATE:
+                    self._apply_update_arrays(rec["cols"], rec["pos"], rec["on"])
+                elif rec["kind"] == APPEND:
+                    self.append_rows(rec["bits"])
+                elif rec["kind"] == MATERIALIZE:
+                    self.materialize(rec["name"], rec["query"])
+        finally:
+            self._replaying = False
+        self._wal = wal
+        return self
+
+    def _rebuild_views(self, pairs) -> None:
+        """Re-register checkpointed views WITHOUT re-executing them: the
+        snapshot already holds each view as a real column (bits and
+        cardinality), only the refresh machinery (support + specialised
+        circuit) needs rebuilding."""
+        from repro.core.circuits import CONST0
+
+        for name, q in pairs:
+            if name not in self._slot:  # pragma: no cover - corrupt manifest
+                raise ValueError(f"view {name!r} missing from snapshot schema")
+            slot = self._slot[name]
+            if self._sharded:
+                card = sum(int(s.cardinalities[slot])
+                           for s in self._base.store.shards)
+            else:
+                card = int(self._base.store.cardinalities[slot])
+            circ = circuit_for((q,), self.n, self._names)
+            support = circ.support()
+            const, residual, kept = circ.specialize(
+                {i: CONST0 for i in range(self.n) if i not in support}
+            )
+            self._views[name] = MaterializedView(
+                name=name,
+                query=q,
+                slot=slot,
+                support=frozenset(support),
+                cardinality=card,
+                kept=tuple(kept),
+                residual=residual,
+                const=const[0],
+            )

@@ -1,0 +1,52 @@
+"""Golden snapshot fixture: a deterministic index + its committed bytes.
+
+``golden.bmsnap`` is the format-stability contract: the writer must keep
+producing these exact bytes for this exact input, and every reader
+version must keep loading them bit-identically.  The recipe below is
+pure arithmetic (no RNG) so the fixture regenerates byte-identically on
+any platform.
+
+Regenerate (only on a deliberate, versioned format change):
+
+    PYTHONPATH=src python tests/data/make_golden.py
+"""
+import os
+
+import numpy as np
+
+TILE_WORDS = 8
+NAMES = ("alpha", "beta", "gamma", "delta", "epsilon", "zeta")
+FIXTURE = os.path.join(os.path.dirname(__file__), "golden.bmsnap")
+
+
+def golden_bits() -> np.ndarray:
+    """6 columns x 1297 positions covering every container kind: all-one,
+    all-zero, sparse, run, dense, mixed -- with a partial final tile."""
+    r = TILE_WORDS * 32 * 5 + 17
+    bits = np.zeros((len(NAMES), r), bool)
+    bits[0, :] = True  # all-one -> TILE_ONE everywhere
+    # bits[1] stays zero -> TILE_ZERO everywhere
+    bits[2, ::37] = True  # sparse containers
+    bits[3, 100:800] = True  # run containers
+    bits[4] = (np.arange(r) * 2654435761 % 97) < 48  # dense tiles
+    bits[5, : r // 2] = (np.arange(r // 2) % 3) == 0  # mixed kinds
+    return bits
+
+
+def golden_index():
+    from repro.query import BitmapIndex
+
+    return BitmapIndex.from_dense(
+        golden_bits(), NAMES, tile_words=TILE_WORDS, containers=True
+    )
+
+
+def write(path: str = FIXTURE) -> str:
+    from repro import persist
+
+    persist.save(golden_index(), path)
+    return path
+
+
+if __name__ == "__main__":
+    print("wrote", write(), f"({os.path.getsize(FIXTURE)} bytes)")

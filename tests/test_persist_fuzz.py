@@ -1,0 +1,221 @@
+"""Differential fuzzing of the persistence subsystem.
+
+Hypothesis drives random column mixes (the ``test_containers_fuzz``
+generators: dense, sparse, runny, all-zero, all-one, partial final tile)
+through save -> load -> query and asserts bit-identity against the
+in-memory original:
+
+  * every ``ALGORITHMS`` backend on bare thresholds over loaded
+    (memmap-backed) stores, container-enabled AND legacy all-dense,
+  * sharded snapshot directories vs the unsharded index,
+  * StreamingIndex checkpoint/recover with random mutation batches,
+    checkpointing at a random point (pre- and post-compaction states),
+  * crash recovery: the WAL truncated at a random byte offset must
+    recover exactly the surviving prefix of mutation batches.
+
+``importorskip``-gated like ``test_properties.py``; the deterministic
+mirror lives in ``test_persist.py``.
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro import persist  # noqa: E402
+from repro.core.bitmaps import unpack  # noqa: E402
+from repro.core.threshold import ALGORITHMS  # noqa: E402
+from repro.query import BitmapIndex  # noqa: E402
+from repro.query.expr import Col, Interval, Threshold  # noqa: E402
+from repro.stream import CompactionPolicy, StreamingIndex  # noqa: E402
+
+SETTINGS = dict(max_examples=10, deadline=None)
+TW = 8
+SPAN = TW * 32
+
+COLUMN_KINDS = ("dense", "sparse", "runny", "all_zero", "all_one", "mixed")
+
+
+def _column(rng, kind, r):
+    bits = np.zeros(r, bool)
+    if kind == "all_one":
+        bits[:] = True
+    elif kind == "dense":
+        bits[:] = rng.random(r) < 0.5
+    elif kind == "sparse":
+        k = int(rng.integers(1, max(2, r // 64)))
+        bits[rng.choice(r, min(k, r), replace=False)] = True
+    elif kind == "runny":
+        for _ in range(int(rng.integers(1, 5))):
+            a = int(rng.integers(0, r))
+            b = int(rng.integers(a + 1, r + 1))
+            bits[a:b] = True
+    elif kind == "mixed":
+        for t0 in range(0, r, SPAN):
+            bits[t0 : t0 + SPAN] = _column(
+                rng, COLUMN_KINDS[int(rng.integers(0, 4))], min(SPAN, r - t0)
+            )
+    return bits
+
+
+@st.composite
+def column_mix(draw, max_n=6, max_tiles=4):
+    n = draw(st.integers(2, max_n))
+    n_tiles = draw(st.integers(1, max_tiles))
+    tail = draw(st.sampled_from([0, 1, 37, SPAN // 2]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    kinds = draw(st.lists(st.sampled_from(COLUMN_KINDS), min_size=n, max_size=n))
+    r = n_tiles * SPAN + tail
+    rng = np.random.default_rng(seed)
+    bits = np.stack([_column(rng, k, r) for k in kinds])
+    return bits, kinds
+
+
+def _result_bits(res, r):
+    got = res.gather() if hasattr(res, "gather") else res
+    return np.asarray(unpack(got, r))
+
+
+@given(column_mix(), st.booleans(), st.data())
+@settings(**SETTINGS)
+def test_loaded_store_every_algorithm(tmp_path_factory, mix, containers, data):
+    """save -> load -> every backend answers bit-identically to the
+    in-memory index, for container-enabled and legacy stores."""
+    bits, _ = mix
+    n, r = bits.shape
+    t = data.draw(st.integers(1, n))
+    d = tmp_path_factory.mktemp("fuzz")
+    names = [f"c{i}" for i in range(n)]
+    idx = BitmapIndex.from_dense(bits, names, tile_words=TW,
+                                 containers=containers)
+    persist.save(idx, d / "x.bmsnap")
+    loaded = persist.load_index(d / "x.bmsnap", verify=True)
+    q = Threshold(t)
+    expect = bits.sum(0) >= t
+    for alg in ALGORITHMS:
+        if alg == "wide_or" and t != 1:
+            continue
+        if alg == "wide_and" and t != n:
+            continue
+        got = _result_bits(loaded.execute(q, backend=alg), r)
+        np.testing.assert_array_equal(
+            got, expect, err_msg=f"containers={containers} alg={alg} t={t}")
+
+
+@given(column_mix(), st.booleans(), st.data())
+@settings(**SETTINGS)
+def test_sharded_snapshot_differential(tmp_path_factory, mix, containers,
+                                       data):
+    bits, _ = mix
+    n, r = bits.shape
+    t = data.draw(st.integers(1, n))
+    names = [f"c{i}" for i in range(n)]
+    idx = BitmapIndex.from_dense(bits, names, tile_words=TW,
+                                 containers=containers)
+    sh = idx.shard(n_shards=min(3, idx.store.n_tiles))
+    d = tmp_path_factory.mktemp("fuzz") / "sharded"
+    sh.save(d)
+    back = type(sh).load(d)
+    expect = bits.sum(0) >= t
+    for q in (Threshold(t), Interval(1, max(1, n - 1))):
+        a = _result_bits(idx.execute(q), r)
+        b = _result_bits(back.execute(q), r)
+        np.testing.assert_array_equal(a, b, err_msg=f"q={q.key()}")
+    np.testing.assert_array_equal(
+        _result_bits(back.execute(Threshold(t)), r), expect)
+
+
+@st.composite
+def mutation_batches(draw, n, r, max_batches=4):
+    batches = []
+    for _ in range(draw(st.integers(1, max_batches))):
+        seed = draw(st.integers(0, 2**31 - 1))
+        k = draw(st.integers(1, 16))
+        rng = np.random.default_rng(seed)
+        cols = rng.integers(0, n, k)
+        pos = rng.integers(0, r, k)
+        on = rng.random(k) < 0.5
+        # last-write-wins dedup so batched apply == sequential replay
+        last = {int(c) * r + int(p): i for i, (c, p) in enumerate(zip(cols, pos))}
+        sel = np.asarray(sorted(last.values()))
+        batches.append((cols[sel], pos[sel], on[sel]))
+    return batches
+
+
+def _apply(stream, names, batch):
+    cols, pos, on = batch
+    sets = {names[c]: pos[on & (cols == c)]
+            for c in np.unique(cols[on])}
+    clears = {names[c]: pos[~on & (cols == c)]
+              for c in np.unique(cols[~on])}
+    stream.update(sets=sets or None, clears=clears or None)
+
+
+@given(column_mix(max_n=4, max_tiles=3), st.data())
+@settings(**SETTINGS)
+def test_stream_recover_differential(tmp_path_factory, mix, data):
+    """Random mutation batches, checkpoint at a random point (pre/post
+    compaction), recover: the recovered index matches a live reference
+    that saw every batch."""
+    bits, _ = mix
+    n, r = bits.shape
+    names = [f"c{i}" for i in range(n)]
+    batches = data.draw(mutation_batches(n, r))
+    ckpt_after = data.draw(st.integers(0, len(batches)))
+    compact_before_ckpt = data.draw(st.booleans())
+    d = tmp_path_factory.mktemp("fuzz") / "durable"
+
+    idx = BitmapIndex.from_dense(bits, names, tile_words=TW)
+    s = StreamingIndex(idx, policy=CompactionPolicy(auto=False),
+                       durable_dir=d)
+    s.materialize("mid", Interval(1, max(1, n - 1)))
+    ref = StreamingIndex(BitmapIndex.from_dense(bits, names, tile_words=TW),
+                         policy=CompactionPolicy(auto=False))
+    ref.materialize("mid", Interval(1, max(1, n - 1)))
+    for i, b in enumerate(batches):
+        _apply(s, names, b)
+        _apply(ref, names, b)
+        if i + 1 == ckpt_after:
+            if compact_before_ckpt:
+                s.compact()
+            s.checkpoint()
+    rec = StreamingIndex.recover(d)
+    assert rec.wal_version == s.wal_version
+    for q in (Threshold(max(1, n // 2)), Col("mid")):
+        np.testing.assert_array_equal(
+            _result_bits(ref.execute(q), r), _result_bits(rec.execute(q), r),
+            err_msg=f"q={q!r} ckpt_after={ckpt_after}")
+    assert rec.count("mid") == ref.count("mid")
+
+
+@given(column_mix(max_n=3, max_tiles=2), st.data())
+@settings(**SETTINGS)
+def test_wal_random_truncation_recovers_prefix(tmp_path_factory, mix, data):
+    """Chop the WAL at a random offset: recovery must replay exactly the
+    surviving record prefix -- never a torn half-batch, never an error."""
+    bits, _ = mix
+    n, r = bits.shape
+    names = [f"c{i}" for i in range(n)]
+    batches = data.draw(mutation_batches(n, r, max_batches=3))
+    d = tmp_path_factory.mktemp("fuzz") / "durable"
+    idx = BitmapIndex.from_dense(bits, names, tile_words=TW)
+    s = StreamingIndex(idx, policy=CompactionPolicy(auto=False),
+                       durable_dir=d)
+    for b in batches:
+        _apply(s, names, b)
+    wal_path = d / "wal.bmwal"
+    raw = wal_path.read_bytes()
+    cut = data.draw(st.integers(12, len(raw)))  # >= WAL header
+    wal_path.write_bytes(raw[:cut])
+    surviving = persist.WriteAheadLog(wal_path).records
+    wal_path.write_bytes(raw[:cut])  # undo the opener's tail truncation
+
+    rec = StreamingIndex.recover(d)
+    ref = StreamingIndex(BitmapIndex.from_dense(bits, names, tile_words=TW),
+                         policy=CompactionPolicy(auto=False))
+    for b in batches[:surviving]:
+        _apply(ref, names, b)
+    q = Threshold(max(1, n // 2))
+    np.testing.assert_array_equal(
+        _result_bits(ref.execute(q), r), _result_bits(rec.execute(q), r),
+        err_msg=f"cut={cut} surviving={surviving}/{len(batches)}")

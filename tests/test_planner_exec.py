@@ -244,3 +244,42 @@ def test_plan_query_names_resolve():
         plan = plan_query(q, 10)
         got = np.asarray(unpack(execute(bm, q), 300))
         np.testing.assert_array_equal(got, expect, err_msg=f"{q} via {plan.algorithm}")
+
+
+def test_planner_picks_min_cost_candidate():
+    """Regression: with member statistics in hand, the plan used to fall
+    through to the scalar default -- selecting ssum (45056 cost words at
+    clean_fraction <= 0.5) while its own candidate list priced fused at
+    4608 whenever the fused kernel wasn't flagged available.  The stats
+    path must end by picking the min-cost runnable candidate (the fused
+    backend runs everywhere: Pallas on TPU, interpret/XLA elsewhere),
+    with tiled_fused still owned by the advantage gate."""
+    from repro.query import BitmapIndex
+
+    n, n_tiles = 8, 8
+    for cf in (0.0, 0.5, 0.95):
+        bits = _bench_clean_fraction_bits(n, n_tiles, cf, seed=int(cf * 100) + 1)
+        idx = BitmapIndex.from_dense(jnp.asarray(bits))
+        stats = idx.store.member_stats(None)
+        for fused_available in (True, False):
+            p = plan_threshold(n, n // 2, stats=stats,
+                               fused_available=fused_available)
+            cands = dict(p.candidates)
+            non_tiled = {k: v for k, v in cands.items() if k != "tiled_fused"}
+            if p.algorithm != "tiled_fused":
+                best = min(non_tiled, key=non_tiled.get)
+                assert p.algorithm == best, (cf, fused_available, p, non_tiled)
+                assert p.cost == non_tiled[best]
+        # the chosen plan executes bit-identically to the oracle backend
+        got = np.asarray(idx.execute(Threshold(n // 2)))
+        ref = np.asarray(idx.execute(Threshold(n // 2), backend="scancount"))
+        np.testing.assert_array_equal(got, ref, err_msg=f"cf={cf}")
+    # the concrete regression: cf=0.5 with fused "unavailable" picks fused
+    # by cost, never the 10x-priced ssum fallback
+    bits = _bench_clean_fraction_bits(n, n_tiles, 0.5, seed=51)
+    idx = BitmapIndex.from_dense(jnp.asarray(bits))
+    p = plan_threshold(n, n // 2, stats=idx.store.member_stats(None),
+                       fused_available=False)
+    assert p.algorithm == "fused", p
+    # scalar path (no stats) keeps the documented default rules
+    assert plan_threshold(16, 8, fused_available=False).algorithm == "ssum"
