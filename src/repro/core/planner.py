@@ -53,13 +53,29 @@ CIRCUIT_BACKENDS = ("circuit", "fused", "tiled_fused")
 # at least this factor (covers the host-side gather/scatter bookkeeping)
 _TILED_ADVANTAGE = 0.5
 
-# words-equivalent fixed cost of one residual-kernel dispatch (trace/launch
-# overhead).  BENCH_query.json showed tiled_fused 5-16x slower on wall time
-# than fused at clean_fraction <= 0.5 despite touching fewer words, because
-# 8 specialization signatures meant 8 launches; pricing each launch group
-# stops the planner from preferring tiled there while leaving the
-# clean-dominated regime (where almost everything folds constant) tiled.
+# words-equivalent fixed cost of one device dispatch (trace/launch
+# overhead).  The single-scan engine (repro.kernels.tiled_scan) collapses
+# per-residual-group launches into at most two dispatches per query (one
+# event merge + one block scan), so this prices dispatches, not groups --
+# the per-group cost that remains (a lax.switch branch, block padding to
+# the group boundary) is priced separately by _GROUP_OVERHEAD_WORDS.
+# BENCH_query.json historically showed tiled_fused 5-16x slower on wall
+# time than fused at clean_fraction <= 0.5 when 8 signatures meant 8
+# launches; with the collapse the dispatch term shrinks, and the
+# _TILED_ADVANTAGE gate plus the group/decode terms keep the planner off
+# tiled in dirty-dominated regimes.
 _LAUNCH_OVERHEAD_WORDS = 256.0
+
+# words-equivalent cost of one residual group riding the single scan:
+# its lax.switch branch and the padding of its tile count to whole blocks.
+_GROUP_OVERHEAD_WORDS = 64.0
+
+# the in-kernel decode prologue stages every compressed cell as dense
+# words in VMEM before the residual evaluates, so a compressed gather's
+# effective cost is its payload *plus* a slice of the staging work; the
+# model inflates the compression ratio by this factor (capped at the
+# dense-equivalent -- decode never costs more than having stored dense).
+_DECODE_WORDS_FACTOR = 2.0
 
 # the tiled executor specializes at most this many signatures exactly;
 # overflow tiles fall back to a dense gather of the full member support,
@@ -134,8 +150,8 @@ def estimate_words_touched(
             gathered = 0
             groups = set()
             # mirror the executor: only the most populous signatures get
-            # exact specialization; overflow tiles run a dense gather of
-            # the full member support (one extra launch)
+            # exact specialization; overflow tiles skip constant folding
+            # and run the dense support residual as one extra group
             exact = sorted(sigs, key=lambda s: -s[0])[:_MAX_EXACT_SIGNATURES]
             overflow_tiles = sum(cnt for cnt, _, _ in sigs) - sum(
                 cnt for cnt, _, _ in exact
@@ -151,15 +167,28 @@ def estimate_words_touched(
                         continue
                     groups.add(dirty)
                 gathered += cnt * dirty * stats.tile_words
-            launches = len(groups)
-            gathered = gathered * ratio  # compressed tiles gather less
+            n_groups = len(groups)
             if overflow_tiles:
-                # overflow runs a dense gather of the full member support
-                gathered += overflow_tiles * n * stats.tile_words
-                launches += 1
+                # overflow rides the same block scan as every other group;
+                # the decode prologue sentinel-fills its clean cells, so
+                # only the overflow tiles' dirty cells are gathered
+                gathered += (
+                    sum(cnt * dirty for cnt, _ones, dirty in sigs)
+                    - sum(cnt * dirty for cnt, _ones, dirty in exact)
+                ) * stats.tile_words
+                n_groups += 1
+            # compressed tiles gather less, but the decode prologue stages
+            # them back to dense words in VMEM -- price payload + staging,
+            # never more than the dense-equivalent gather
+            eff_ratio = min(1.0, ratio * _DECODE_WORDS_FACTOR)
+            gathered = gathered * eff_ratio
+            # the scan engine dispatches at most twice per query (event
+            # merge + block scan), regardless of group count
+            launches = min(2, n_groups) if n_groups else 0
             return (
                 float(gathered) + nw + n_tiles
                 + _LAUNCH_OVERHEAD_WORDS * launches
+                + _GROUP_OVERHEAD_WORDS * n_groups
             )
         # no signature stats: gathered (compressed) words + one output pass
         # + per-tile bookkeeping (the legacy coarse estimate)

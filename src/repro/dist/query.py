@@ -563,6 +563,20 @@ class ShardedBitmapIndex:
                 i.get("compressed_words_gathered", 0) for i in infos if i
             ),
             "event_tiles": sum(i.get("event_tiles", 0) for i in infos if i),
+            "densified_tiles": sum(
+                i.get("densified_tiles", 0) for i in infos if i
+            ),
+            "decode_words": sum(i.get("decode_words", 0) for i in infos if i),
+            # per-kind storage-word breakdown, summed across shards (zeros
+            # when no shard ran tiled)
+            "words_by_kind": {
+                kind: sum(
+                    i.get("words_by_kind", {}).get(kind, 0)
+                    for i in infos
+                    if i
+                )
+                for kind in ("dense", "sparse", "run")
+            },
         }
         return per_shard
 

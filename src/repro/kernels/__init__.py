@@ -1,9 +1,12 @@
 """Pallas TPU kernels for the paper's bit-parallel hot spot.
 
 threshold_ssum: fused sideways-sum threshold/symmetric circuit evaluation.
+tiled_scan: single-scan tiled engine -- in-kernel container decode, one
+block-unrolled dispatch over all residual groups, device event merge.
 ops: jit wrappers (interpret=True off-TPU).  ref: pure-jnp oracles.
 """
 
 from .ops import fused_interval, fused_symmetric, fused_threshold, fused_weighted_threshold
 from .ref import symmetric_ref, threshold_ref
 from .threshold_ssum import pick_block_words, threshold_pallas
+from .tiled_scan import block_runner, clear_scan_runners, event_runner

@@ -114,6 +114,9 @@ class ShardContext:
     bare: tuple | None = None  # (member slots | None, T) for bare thresholds
     column: int | None = None  # slot for 'column' plans
     block_words: int | None = None
+    #: tiled case-3 engine override: "scan" (single-dispatch device engine)
+    #: / "merge" (host event-merge oracle) / None (auto per store)
+    tiled_engine: str | None = None
 
     def member_rows(self) -> jax.Array:
         """Dense rows of the bare-threshold member subset."""
@@ -143,7 +146,8 @@ def run_plan(ctx: ShardContext, plan):
         from repro.storage import run_tiled_circuit
 
         out, info = run_tiled_circuit(
-            ctx.store(), ctx.circuit(), block_words=ctx.block_words
+            ctx.store(), ctx.circuit(), block_words=ctx.block_words,
+            engine=ctx.tiled_engine,
         )
         return out, info
     if alg in THRESHOLD_BACKENDS and ctx.bare is not None:

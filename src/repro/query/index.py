@@ -73,9 +73,11 @@ def compiled_cache_info() -> dict:
 
 def clear_compiled_cache() -> None:
     from repro.kernels.threshold_ssum import clear_circuit_runners
+    from repro.kernels.tiled_scan import clear_scan_runners
 
     _CIRCUITS.clear()
     clear_circuit_runners()
+    clear_scan_runners()
     _CACHE_INFO["hits"] = 0
     _CACHE_INFO["misses"] = 0
 

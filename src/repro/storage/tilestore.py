@@ -336,6 +336,7 @@ class TileStore:
         self._dirty_index_cache: np.ndarray | None = None
         self._dirty_dev = None
         self._packs: dict | None = None  # store-wide per-kind packs
+        self._device_packs: tuple | None = None  # jnp pack mirrors + sentinels
         self._storage_words_cell: np.ndarray | None = None
         self._dense = dense  # optional cached jnp uint32[N, n_words]
         # bit-level metadata (RUN tags, runcounts): computed on first access
@@ -440,6 +441,38 @@ class TileStore:
         :meth:`from_arrays` rebuilds the store from them."""
         self._assemble_packs()
         return self._packs
+
+    def device_packs(self) -> tuple:
+        """Device-resident pack mirrors for the single-scan engine
+        (``repro.kernels.tiled_scan``), uploaded once per store and cached:
+
+        * ``dense_pack1`` uint32[D + 2, tile_words] -- the dense pack plus
+          an all-zeros sentinel row at ``D`` and an all-ones row at
+          ``D + 1``, so clean cells gather by class without a branch;
+        * ``sparse_pack1`` uint16[S + 1] -- one zero pad entry so padded
+          gathers read a harmless position;
+        * ``run_pack1`` uint16[R + 1, 2] -- one (0, 0) pad interval (an
+          empty run toggles twice at bit 0: a no-op under prefix-xor).
+        """
+        if self._device_packs is None:
+            import jax.numpy as jnp
+
+            self._assemble_packs()
+            p = self._packs
+            tw = self.tile_words
+            dense1 = np.concatenate([
+                p["dense_pack"],
+                np.zeros((1, tw), np.uint32),
+                np.full((1, tw), 0xFFFFFFFF, np.uint32),
+            ])
+            sparse1 = np.concatenate([p["sparse_pack"],
+                                      np.zeros(1, np.uint16)])
+            run1 = np.concatenate([p["run_pack"],
+                                   np.zeros((1, 2), np.uint16)])
+            self._device_packs = (
+                jnp.asarray(dense1), jnp.asarray(sparse1), jnp.asarray(run1)
+            )
+        return self._device_packs
 
     @property
     def storage_words_cell(self) -> np.ndarray:
@@ -665,6 +698,7 @@ class TileStore:
             "run_bounds": np.asarray(rb),
         }
         store._storage_words_cell = None
+        store._device_packs = None
         store._dense = None
         store._refined_classes = None
         store._col_stats = None

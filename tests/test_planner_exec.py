@@ -230,6 +230,41 @@ def test_bench_words_touched_never_exceed_dense_estimate():
         assert tiled <= dense, row["clean_fraction"]
 
 
+def test_collapsed_launch_pricing_and_realised_counters():
+    """Regression for the single-scan engine recalibration: the launch
+    overhead now prices at most two dispatches (plus per-group switch
+    overhead and a decode-staging factor), and that must NOT re-admit
+    tiled_fused at cf <= 0.5 on the scalar threshold path -- while the
+    plan-predicted words ordering still matches the realised ``info``
+    counters on the scan path."""
+    from repro.core.planner import estimate_words_touched
+    from repro.query import BitmapIndex
+
+    n, n_tiles = 8, 8
+    realised = {}
+    predicted = {}
+    for cf in (0.0, 0.5, 0.95):
+        bits = _bench_clean_fraction_bits(n, n_tiles, cf, seed=int(cf * 100) + 1)
+        idx = BitmapIndex.from_dense(jnp.asarray(bits))
+        stats = idx.store.member_stats(None)
+        plan = plan_threshold(n, n // 2, stats=stats, fused_available=True)
+        if cf <= 0.5:
+            assert plan.algorithm != "tiled_fused", (cf, plan)
+        else:
+            assert plan.algorithm == "tiled_fused", (cf, plan)
+        predicted[cf] = estimate_words_touched(
+            "tiled_fused", n, n // 2, n_words=stats.n_words, stats=stats
+        )
+        idx.execute(Threshold(n // 2), backend="tiled_fused")
+        info = idx.last_info
+        assert info["engine"] == "scan"
+        assert info["launches"] <= 2, (cf, info)
+        realised[cf] = info["dirty_words_gathered"]
+    # cheaper predictions must correspond to fewer realised words
+    assert predicted[0.95] < predicted[0.5] < predicted[0.0]
+    assert realised[0.95] < realised[0.5] < realised[0.0]
+
+
 def test_plan_query_names_resolve():
     """plan_query outputs execute directly through the query layer."""
     bits, bm = _mk(10, 300, 0.3, seed=9)

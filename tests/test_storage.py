@@ -393,6 +393,151 @@ def test_event_path_engages_and_reduces_words():
     assert info["words_by_kind"]["sparse"] > 0
 
 
+def _mixed_bits(seed=29):
+    """Deterministic dense/sparse/run/all-zero/all-one/partial-tile mix."""
+    rng = np.random.default_rng(seed)
+    span8 = 8 * 32
+    n, r = 6, 5 * span8 + 41  # partial final tile
+    bits = np.zeros((n, r), bool)
+    bits[0, ::97] = True  # sparse everywhere
+    bits[1, 30:700] = True  # one long run
+    bits[2] = rng.random(r) < 0.5  # dense noise
+    bits[3, :span8] = True  # all-one tile, zeros elsewhere
+    bits[4, ::2] = True  # toothy: dirty but container-ineligible
+    bits[5, span8 : 2 * span8] = rng.random(span8) < 0.1  # sparse island
+    return bits, r
+
+
+def test_scan_engine_matches_merge_oracle_deterministic():
+    """Deterministic mirror of the fuzz suite's engine differential: the
+    single-scan device engine (in-kernel container decode, O(1) dispatch)
+    is bit-identical to the host event-merge oracle on dense/sparse/run/
+    clean/partial-tile mixes, {containers, legacy} x {full, restricted},
+    single- and multi-output circuits -- and launches at most twice."""
+    bits, r = _mixed_bits()
+    n = bits.shape[0]
+    counts = bits.sum(0)
+    circs = [
+        (build_threshold_circuit(n, 2, "ssum"), counts >= 2),
+        (build_interval_circuit(n, 2, 4), (counts >= 2) & (counts <= 4)),
+    ]
+    for containers in (True, False):
+        store = _store_of(bits, containers=containers, tile_words=8)
+        for circ, expect in circs:
+            out_s, info_s = run_tiled_circuit(store, circ, engine="scan")
+            out_m, info_m = run_tiled_circuit(store, circ, engine="merge")
+            np.testing.assert_array_equal(
+                np.asarray(out_s), np.asarray(out_m),
+                err_msg=f"containers={containers}",
+            )
+            np.testing.assert_array_equal(np.asarray(unpack(out_s, r)), expect)
+            assert info_s["engine"] == "scan" and info_m["engine"] == "merge"
+            assert info_s["launches"] <= 2, info_s
+            # consistent per-kind accounting on BOTH engines (legacy
+            # stores used to report zeroed breakdowns on the device path)
+            for info in (info_s, info_m):
+                if info["densified_tiles"] or info["event_tiles"]:
+                    assert sum(info["words_by_kind"].values()) > 0, info
+            # restricted-tiles (view-refresh) parity, host [k, n_sel, tw]
+            tiles = np.asarray([0, 2, store.n_tiles - 1])
+            got_s, ri = run_tiled_circuit(
+                store, circ, tiles=tiles, engine="scan"
+            )
+            got_m, _ = run_tiled_circuit(
+                store, circ, tiles=tiles, engine="merge"
+            )
+            np.testing.assert_array_equal(got_s, got_m)
+            assert ri["launches"] <= 2
+
+
+def test_scan_engine_single_dispatch_multi_residual():
+    """A batched multi-query circuit over clean-mixed data produces many
+    structurally distinct residual groups; the seed path launched once per
+    group, the scan engine at most twice total."""
+    bits = _tiled_bits(8, 12, 0.5, seed=3)
+    r = bits.shape[1]
+    counts = bits.sum(0)
+    idx = BitmapIndex.from_dense(jnp.asarray(bits))
+    res = idx.execute_many(
+        [Threshold(2), Threshold(5), Interval(3, 6)], backend="tiled_fused"
+    )
+    np.testing.assert_array_equal(np.asarray(unpack(res[0], r)), counts >= 2)
+    np.testing.assert_array_equal(np.asarray(unpack(res[1], r)), counts >= 5)
+    np.testing.assert_array_equal(
+        np.asarray(unpack(res[2], r)), (counts >= 3) & (counts <= 6)
+    )
+    info = idx.last_info
+    assert info["engine"] == "scan"
+    assert info["residual_signatures"] >= 2  # genuinely multi-group
+    assert info["launches"] <= 2, info
+    # the merge oracle on the same workload launches once per group
+    import os
+
+    os.environ["REPRO_TILED_ENGINE"] = "merge"
+    try:
+        idx.execute_many(
+            [Threshold(2), Threshold(5), Interval(3, 6)],
+            backend="tiled_fused",
+        )
+    finally:
+        del os.environ["REPRO_TILED_ENGINE"]
+    assert idx.last_info["launches"] >= info["launches"]
+
+
+def test_scan_engine_pallas_grid_parity():
+    """FORCE_PALLAS_INTERPRET pins the scalar-prefetched Pallas grid kernel
+    (the TPU path) against the XLA scan on CPU."""
+    from repro.kernels import tiled_scan
+
+    bits, r = _mixed_bits(seed=31)
+    n = bits.shape[0]
+    store = _store_of(bits, containers=True, tile_words=8)
+    circ = build_threshold_circuit(n, 3, "ssum")
+    out_xla, _ = run_tiled_circuit(store, circ, engine="scan")
+    tiled_scan.FORCE_PALLAS_INTERPRET = True
+    tiled_scan.clear_scan_runners()
+    try:
+        out_pl, _ = run_tiled_circuit(store, circ, engine="scan")
+    finally:
+        tiled_scan.FORCE_PALLAS_INTERPRET = False
+        tiled_scan.clear_scan_runners()
+    np.testing.assert_array_equal(np.asarray(out_xla), np.asarray(out_pl))
+
+
+def test_specialize_memo_is_lru():
+    """The residual memo evicts oldest-used entries one at a time (not a
+    wholesale clear), and a hit refreshes recency."""
+    from repro.storage import tiled
+
+    memo = tiled._SPECIALIZE_MEMO
+    saved = dict(memo)
+    saved_order = list(memo)
+    try:
+        memo.clear()
+        for i in range(4):
+            memo[("c", bytes([i]))] = (None, None, None, None)
+        old_cap, tiled._SPECIALIZE_MEMO_CAP = tiled._SPECIALIZE_MEMO_CAP, 4
+        try:
+            # a hit moves ("c", b"\x00") to the back...
+            tiled._specialize_hit = memo.get(("c", b"\x00"))
+            memo.move_to_end(("c", b"\x00"))
+            bits = _tiled_bits(3, 2, 0.0, seed=5)
+            store = _store_of(bits)
+            circ = build_threshold_circuit(3, 2, "ssum")
+            run_tiled_circuit(store, circ)
+            # ...so the eviction (cap 4) drops ("c", b"\x01"), not the
+            # refreshed entry and not the whole memo
+            assert ("c", b"\x00") in memo
+            assert ("c", b"\x01") not in memo
+            assert len(memo) >= 3
+        finally:
+            tiled._SPECIALIZE_MEMO_CAP = old_cap
+    finally:
+        memo.clear()
+        for k in saved_order:
+            memo[k] = saved[k]
+
+
 # ---------------------------------------------------------------------------
 # Tiled execution vs oracle
 # ---------------------------------------------------------------------------
