@@ -15,6 +15,10 @@ Prints ``name,value,derived`` CSV lines.  Sections:
   persist  -- on-disk format: snapshot size vs density, cold-load-to-
               first-query vs rebuild, WAL replay throughput (repro.persist;
               scratch snapshots in a temp dir, removed on exit)
+  serve    -- multi-client serving front-end: coalesced QPS vs sequential
+              across client counts, cache/dedup/shed rates, batch-size
+              histogram, plan-memo + calibration counters (repro.serve;
+              smoke sizes, writes BENCH_serve.json)
   roofline -- three-term roofline per dry-run cell (deliverable g; requires
               artifacts/dryrun from ``python -m repro.launch.dryrun``)
 """
@@ -25,7 +29,7 @@ import traceback
 
 
 def main() -> None:
-    sections = sys.argv[1:] or ["table5", "table7", "fig3", "table10", "heatmap", "kernel", "weighted", "query", "stream", "persist", "roofline"]
+    sections = sys.argv[1:] or ["table5", "table7", "fig3", "table10", "heatmap", "kernel", "weighted", "query", "stream", "persist", "serve", "roofline"]
     failures = 0
     for section in sections:
         print(f"# --- {section} ---")
@@ -68,6 +72,10 @@ def main() -> None:
                 rows = mod.run(smoke=True)
             elif section == "persist":
                 from benchmarks import persist_bench as mod
+
+                rows = mod.run(smoke=True)
+            elif section == "serve":
+                from benchmarks import serve_bench as mod
 
                 rows = mod.run(smoke=True)
             elif section == "roofline":

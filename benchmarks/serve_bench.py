@@ -1,0 +1,235 @@
+"""Serving-throughput benchmark: the coalescing front-end vs per-query loops.
+
+Synthetic multi-tenant workload: K logical clients concurrently submit
+requests drawn (zipf-weighted) from a shared pool of hot queries -- the
+abstract's "on sale in 2 to 10 stores" shape plus thresholds/composites
+over store subsets -- against one :class:`repro.serve.QueryServer`.  The
+headline number is queries/second, not single-query wall time:
+
+  * **sequential baseline** -- the identical request stream executed one
+    ``idx.execute`` at a time (what a naive per-request handler does; it
+    still enjoys the compiled-circuit cache and plan memo);
+  * **coalesced front-end** -- the same stream through ``QueryServer``:
+    shape-bucketed micro-batches, semantic dedup, the version-keyed
+    result cache, calibration feedback.
+
+Writes ``BENCH_serve.json``: QPS per client count, batch-size histogram,
+cache-hit / dedup / shed rates, plan-memo counters, measured calibration
+constants, and an oracle spot-check flag (every distinct pool query served
+bit-identical to direct execution).  The smoke config asserts the
+coalesced front-end clears >= 3x sequential QPS at >= 8 clients.
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+from pathlib import Path
+
+import numpy as np
+
+OUT_PATH = Path(__file__).resolve().parent.parent / "BENCH_serve.json"
+
+SMOKE = dict(n_cols=16, n_words=2048, clients=(1, 2, 4, 8), per_client=40,
+             pool_size=12, repeats=1)
+FULL = dict(n_cols=24, n_words=4096, clients=(1, 2, 4, 8, 16), per_client=200,
+            pool_size=16, repeats=3)
+
+MIN_SPEEDUP_AT_8 = 3.0
+
+
+def _build_index(n_cols: int, n_words: int, seed: int = 0):
+    from repro.stream import StreamingIndex
+
+    rng = np.random.default_rng(seed)
+    r = n_words * 32
+    dens = rng.uniform(0.02, 0.4, n_cols)
+    bits = rng.random((n_cols, r)) < dens[:, None]
+    # clean territory so the tiled path is a real planner candidate
+    bits[: n_cols // 3, : r // 2] = False
+    names = [f"store{i}" for i in range(n_cols)]
+    return StreamingIndex.from_dense(bits, names=names), names
+
+
+def _query_pool(names, pool_size: int, seed: int = 1):
+    from repro.query import And, AndNot, Col, Interval, Not, Threshold
+
+    rng = np.random.default_rng(seed)
+    pool = [Interval(2, 10)]  # the abstract's query, over every store
+    while len(pool) < pool_size:
+        k = int(rng.integers(3, min(8, len(names))))
+        members = tuple(rng.choice(names, size=k, replace=False))
+        t = int(rng.integers(1, k + 1))
+        q = Threshold(t, over=members)
+        style = len(pool) % 3
+        if style == 1:
+            q = And(q, Not(Col(str(rng.choice(names)))))
+        elif style == 2:
+            q = AndNot(Interval(1, max(1, k - 1), over=members), Col(str(rng.choice(names))))
+        pool.append(q)
+    return pool
+
+
+def _request_streams(pool, clients: int, per_client: int, seed: int = 2):
+    """Per-client request lists, zipf-weighted over the hot pool."""
+    rng = np.random.default_rng(seed)
+    w = 1.0 / np.arange(1, len(pool) + 1)
+    w /= w.sum()
+    return [
+        [pool[i] for i in rng.choice(len(pool), size=per_client, p=w)]
+        for _ in range(clients)
+    ]
+
+
+def _sequential_qps(stream_idx, requests, repeats: int) -> float:
+    import jax
+
+    idx = stream_idx.index()
+    best = 0.0
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for q in requests:
+            jax.block_until_ready(idx.execute(q))
+        wall = time.perf_counter() - t0
+        best = max(best, len(requests) / wall)
+    return best
+
+
+def _coalesced_qps(stream_idx, streams, repeats: int, window: float):
+    from repro.serve import QueryServer
+
+    best = None
+    for _ in range(repeats):
+        server = QueryServer(stream_idx, window=window, max_pending=4096)
+        server.start()
+        results: list = [None] * len(streams)
+
+        def client(ci: int) -> None:
+            futs = [server.submit(q) for q in streams[ci]]
+            results[ci] = [f.result(60) for f in futs]
+
+        t0 = time.perf_counter()
+        threads = [
+            threading.Thread(target=client, args=(ci,)) for ci in range(len(streams))
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall = time.perf_counter() - t0
+        server.stop()
+        n = sum(len(s) for s in streams)
+        qps = n / wall
+        if best is None or qps > best[0]:
+            best = (qps, server.info())
+    return best
+
+
+def _oracle_check(stream_idx, pool) -> bool:
+    """Every distinct pool query served through the front-end must be
+    bit-identical to direct execution."""
+    from repro.serve import QueryServer
+
+    idx = stream_idx.index()
+    server = QueryServer(stream_idx, window=0)
+    futs = [server.submit(q) for q in pool]
+    while server.pump():
+        pass
+    for q, f in zip(pool, futs):
+        got = np.asarray(f.result(0))
+        ref = np.asarray(idx.execute(q))
+        if not np.array_equal(got, ref):
+            return False
+    return True
+
+
+def run(smoke: bool = True):
+    import jax
+
+    from repro.core.calibration import measure_calibration, set_calibration
+    from repro.query import clear_compiled_cache, plan_memo_info
+
+    cfg = SMOKE if smoke else FULL
+    stream_idx, names = _build_index(cfg["n_cols"], cfg["n_words"])
+    pool = _query_pool(names, cfg["pool_size"])
+
+    # measured words->us constants steer every plan below and land in the
+    # artifact; the 'repeats' keep the pass cheap on CPU
+    calib = measure_calibration(repeats=2, n_words=min(cfg["n_words"], 1024))
+    set_calibration(calib)
+
+    # absorb compilation for both paths: each distinct query runs once
+    idx = stream_idx.index()
+    for q in pool:
+        jax.block_until_ready(idx.execute(q))
+
+    data = {
+        "device": jax.default_backend(),
+        "config": {k: (list(v) if isinstance(v, tuple) else v) for k, v in cfg.items()},
+        "calibration": calib.to_obj(),
+        "sweep": [],
+    }
+    rows = []
+
+    oracle_ok = _oracle_check(stream_idx, pool)
+    data["oracle_bit_identical"] = bool(oracle_ok)
+    assert oracle_ok, "served results diverged from direct execution"
+
+    seq_qps = None
+    speedup_at_8 = None
+    for clients in cfg["clients"]:
+        streams = _request_streams(pool, clients, cfg["per_client"])
+        flat = [q for s in streams for q in s]
+        if seq_qps is None:  # request mix is identical per client count
+            seq_qps = _sequential_qps(stream_idx, flat, cfg["repeats"])
+            data["sequential_qps"] = seq_qps
+            rows.append(("serve_sequential_qps", seq_qps, "per-query execute loop"))
+        qps, info = _coalesced_qps(
+            stream_idx, streams, cfg["repeats"], window=0.001
+        )
+        served = max(1, info["served"])
+        point = {
+            "clients": clients,
+            "offered": len(flat),
+            "qps": qps,
+            "speedup_vs_sequential": qps / seq_qps,
+            "cache_hit_rate": info["cache_hits"] / served,
+            "dedup_rate": info["dedup_hits"] / served,
+            "shed": info["shed"],
+            "executed": info["executed"],
+            "batches": info["batches"],
+            "batch_size_hist": info["batch_size_hist"],
+            "plan_memo": info["plan_memo"],
+        }
+        data["sweep"].append(point)
+        rows.append(
+            (
+                f"serve_qps_c{clients}",
+                qps,
+                f"{qps / seq_qps:.1f}x seq; cache {point['cache_hit_rate']:.0%} "
+                f"dedup {point['dedup_rate']:.0%} exec {info['executed']}",
+            )
+        )
+        if clients >= 8 and speedup_at_8 is None:
+            speedup_at_8 = qps / seq_qps
+
+    data["plan_memo"] = plan_memo_info()
+    OUT_PATH.write_text(json.dumps(data, indent=2, sort_keys=True))
+    rows.append(("bench_serve_json", 1, str(OUT_PATH)))
+
+    if smoke and speedup_at_8 is not None:
+        assert speedup_at_8 >= MIN_SPEEDUP_AT_8, (
+            f"coalesced front-end only {speedup_at_8:.2f}x sequential at >=8 "
+            f"clients (need >= {MIN_SPEEDUP_AT_8}x)"
+        )
+    set_calibration(None)
+    clear_compiled_cache()
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    smoke = "--smoke" in sys.argv
+    for name, val, extra in run(smoke=smoke):
+        print(f"{name},{val if isinstance(val, int) else round(float(val), 3)},{extra}")

@@ -38,6 +38,8 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.core.calibration import get_calibration
+
 __all__ = [
     "Plan",
     "plan_threshold",
@@ -91,6 +93,29 @@ class Plan:
     rationale: str
     cost: float | None = None  # estimated words touched (None: no estimate)
     candidates: tuple = ()  # ((backend, estimated words touched), ...)
+    #: calibrated microsecond estimates (``core.calibration``); None / empty
+    #: when no calibration is installed or a backend has no constant
+    cost_us: float | None = None
+    candidates_us: tuple = ()  # ((backend, estimated µs), ...) sorted by µs
+    #: "hit" / "miss" when the plan came through the per-store plan memo
+    #: (``BitmapIndex.explain``); None for direct planner calls
+    memo: str | None = None
+
+
+def _attach_us(p: Plan) -> Plan:
+    """Price the plan and its candidate list in calibrated microseconds
+    when a calibration is installed; a no-op otherwise."""
+    calib = get_calibration()
+    if calib is None:
+        return p
+    cands = [
+        (b, calib.cost_us(b, w))
+        for b, w in p.candidates
+        if calib.cost_us(b, w) is not None
+    ]
+    p.candidates_us = tuple(sorted(cands, key=lambda kv: kv[1]))
+    p.cost_us = calib.cost_us(p.algorithm, p.cost)
+    return p
 
 
 def estimate_words_touched(
@@ -239,7 +264,7 @@ def plan_threshold(
         cost = estimate_words_touched(
             alg, n, t, n_words=n_words, stats=stats, density=density
         )
-        return Plan(alg, why, cost=cost, candidates=cands)
+        return _attach_us(Plan(alg, why, cost=cost, candidates=cands))
 
     if t <= 1:
         return plan("wide_or", "T<=1 is a wide OR (paper 2.3)")
@@ -286,6 +311,24 @@ def plan_threshold(
         # by a margin, not by a hair.
         eligible = [kv for kv in cands if kv[0] != "tiled_fused"]
         if eligible:
+            calib = get_calibration()
+            ranked = (
+                [(b, calib.cost_us(b, w)) for b, w in eligible]
+                if calib is not None
+                and all(calib.cost_us(b, w) is not None for b, w in eligible)
+                else None
+            )
+            if ranked is not None:
+                # calibrated path: rank by measured µs, not raw words --
+                # the per-backend exchange rate is exactly what the words
+                # model cannot know (host lists vs fused kernel vs XLA)
+                best, cost_us = min(ranked, key=lambda kv: kv[1])
+                return plan(
+                    best,
+                    f"min-cost candidate: ~{int(cost_us)}us calibrated "
+                    f"({calib.device} words->us constants over member tile "
+                    "statistics)",
+                )
             best, cost = min(eligible, key=lambda kv: kv[1])
             return plan(
                 best,
@@ -327,10 +370,10 @@ def plan_query(
 
     q = as_query(query)
     if type(q) is Col:
-        return Plan(
+        return _attach_us(Plan(
             "column", "bare column reference: fetch, no compute",
             cost=float(stats.n_words if stats is not None else n_words),
-        )
+        ))
     members = _bare_threshold_members(q)
     if members is not None:
         return plan_threshold(
@@ -349,7 +392,7 @@ def plan_query(
         tiled = estimate_words_touched("tiled_fused", n, None, n_words=n_words, stats=stats)
         dense = estimate_words_touched("fused", n, None, n_words=n_words)
         if tiled is not None and tiled < _TILED_ADVANTAGE * dense:
-            return Plan(
+            return _attach_us(Plan(
                 "tiled_fused",
                 f"member columns are {stats.clean_fraction:.0%} clean tiles; the "
                 "whole compiled circuit gets RBMRG case-skipping per tile "
@@ -357,18 +400,18 @@ def plan_query(
                 cost=tiled,
                 candidates=_candidates(n, None, n_words=n_words, stats=stats,
                                        density=density),
-            )
+            ))
     cost = estimate_words_touched(backend, n, None, n_words=n_words)
     if type(q) is Weighted:
-        return Plan(
+        return _attach_us(Plan(
             backend,
             "weighted threshold: binary weight decomposition circuit "
             "(O(log max_w) adders instead of replication; beyond-paper)",
             cost=cost,
-        )
-    return Plan(
+        ))
+    return _attach_us(Plan(
         backend,
         "symmetric/composite expression: one compiled circuit, sub-queries "
         "share the sideways-sum adder via CSE (paper 4.4 + query layer)",
         cost=cost,
-    )
+    ))

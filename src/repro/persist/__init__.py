@@ -15,6 +15,12 @@ High-level entry points live on the owning classes: ``BitmapIndex.save``
 / ``.load``, ``ShardedBitmapIndex.save`` / ``.load``, and
 ``StreamingIndex.checkpoint`` / ``.recover``.
 """
+from .calibration import (
+    CALIBRATION_FILE,
+    ensure_calibration,
+    load_calibration,
+    save_calibration,
+)
 from .format import FormatError, read_manifest, schema_digest, verify_snapshot
 from .shards import load_shard, load_sharded, read_shard_map, save_sharded
 from .snapshot import load, load_index, save, snapshot_info
@@ -22,9 +28,13 @@ from .tiers import PagedTileStore
 from .wal import WriteAheadLog, query_from_obj, query_to_obj
 
 __all__ = [
+    "CALIBRATION_FILE",
     "FormatError",
     "PagedTileStore",
     "WriteAheadLog",
+    "ensure_calibration",
+    "load_calibration",
+    "save_calibration",
     "load",
     "load_index",
     "load_shard",

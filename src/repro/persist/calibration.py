@@ -1,0 +1,83 @@
+"""Persisted planner calibration constants (``calibration.json``).
+
+Calibration constants (``core.calibration.Calibration`` -- per-backend
+words→µs roofline rates) are device properties, not index data, so they
+live in their own small JSON artifact alongside snapshots rather than
+inside the ``.bmsnap`` framing: a serving directory typically holds
+
+    snapshot.bmsnap      the index
+    wal.bmwal            the mutation log
+    calibration.json     this device's measured planner constants
+
+Constants are keyed by the jax backend name; loading a file measured on a
+different device kind returns None (the caller re-measures) unless
+``allow_mismatch`` is set.  Writes are tmp+rename atomic like every other
+``repro.persist`` artifact.
+"""
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+
+from repro.core.calibration import Calibration, measure_calibration, set_calibration
+
+__all__ = [
+    "CALIBRATION_FILE",
+    "save_calibration",
+    "load_calibration",
+    "ensure_calibration",
+]
+
+CALIBRATION_FILE = "calibration.json"
+
+
+def _resolve(path) -> Path:
+    p = Path(path)
+    return p / CALIBRATION_FILE if p.is_dir() or not p.suffix else p
+
+
+def save_calibration(calib: Calibration, path) -> Path:
+    """Write constants as sorted-key JSON (atomic tmp+rename); ``path`` may
+    be a directory (gets ``calibration.json``) or an explicit file."""
+    target = _resolve(path)
+    target.parent.mkdir(parents=True, exist_ok=True)
+    tmp = target.with_suffix(target.suffix + ".tmp")
+    tmp.write_text(json.dumps(calib.to_obj(), indent=2, sort_keys=True))
+    os.replace(tmp, target)
+    return target
+
+
+def load_calibration(path, *, allow_mismatch: bool = False) -> Calibration | None:
+    """Read persisted constants; None when absent, unreadable, or measured
+    on a different device kind (stale constants are worse than none)."""
+    import jax
+
+    target = _resolve(path)
+    if not target.exists():
+        return None
+    try:
+        obj = json.loads(target.read_text())
+    except (OSError, ValueError):
+        return None
+    calib = Calibration.from_obj(obj)
+    if not allow_mismatch and calib.device not in ("identity", jax.default_backend()):
+        return None
+    return calib
+
+
+def ensure_calibration(path, *, activate: bool = True, **measure_kw) -> Calibration:
+    """Load persisted constants or measure-and-persist them on first use.
+
+    The serving front-end's startup path: one call yields this device's
+    constants (a ~1s measurement pass the first time, a JSON read after)
+    and installs them as the process-active calibration so every
+    subsequent plan is priced in microseconds.
+    """
+    calib = load_calibration(path)
+    if calib is None:
+        calib = measure_calibration(**measure_kw)
+        save_calibration(calib, path)
+    if activate:
+        set_calibration(calib)
+    return calib

@@ -39,6 +39,9 @@ from .expr import (
     Sym,
     Threshold,
     Weighted,
+    bind_members,
+    canonical_key,
+    column_refs,
 )
 from .compile import build_query_circuit
 from .executors import (
@@ -54,6 +57,7 @@ from .index import (
     clear_compiled_cache,
     compiled_cache_info,
     execute,
+    plan_memo_info,
 )
 
 __all__ = [
@@ -81,4 +85,8 @@ __all__ = [
     "THRESHOLD_BACKENDS",
     "compiled_cache_info",
     "clear_compiled_cache",
+    "plan_memo_info",
+    "bind_members",
+    "canonical_key",
+    "column_refs",
 ]

@@ -37,6 +37,8 @@ __all__ = [
     "AndNot",
     "as_query",
     "bind_members",
+    "canonical_key",
+    "column_refs",
 ]
 
 
@@ -292,6 +294,113 @@ class AndNot(Query):
 
     def key(self) -> tuple:
         return ("andnot", self.keep.key(), self.drop.key())
+
+
+def _sorted_keys(keys) -> tuple:
+    # keys are heterogeneous nested tuples (ints, strs, None); repr gives a
+    # total, deterministic order where tuple comparison would raise
+    return tuple(sorted(keys, key=repr))
+
+
+def canonical_key(q: Query) -> tuple:
+    """A *semantic* cache key: equal for queries that provably compute the
+    same bitmap, stricter than :meth:`Query.key` (which is structural).
+
+    Normalisations applied recursively:
+
+      * symmetric-function leaves sort their member keys (a symmetric
+        function cannot depend on member order);
+      * :class:`Weighted` sorts (member, weight) pairs together;
+      * :class:`And` / :class:`Or` flatten same-operator children, sort and
+        deduplicate them (idempotence), and collapse the single-child case;
+      * double negation cancels.
+
+    This is the key the serving tier's result cache and in-flight request
+    deduplication use (``repro.serve.frontend``): two clients asking
+    ``Threshold(2, over=("a", "b"))`` and ``Threshold(2, over=("b", "a"))``
+    share one execution and one cache entry.  Implicit ``over=None`` member
+    sets are kept as ``None`` -- resolve them first with
+    :func:`bind_members` when the key must be schema-stable.
+    """
+
+    def over_key(over):
+        return None if over is None else _sorted_keys(canonical_key(m) for m in over)
+
+    q = as_query(q)
+    if type(q) is Col:
+        return ("col", q.name)
+    if isinstance(q, Threshold):
+        return ("threshold", q.t, over_key(q.over))
+    if isinstance(q, Interval):
+        return ("interval", q.lo, q.hi, over_key(q.over))
+    if isinstance(q, Exactly):
+        return ("exactly", q.k, over_key(q.over))
+    if isinstance(q, Parity):
+        return ("parity", over_key(q.over))
+    if isinstance(q, Majority):
+        return ("majority", over_key(q.over))
+    if isinstance(q, Sym):
+        return ("sym", q.table, over_key(q.over))
+    if isinstance(q, Weighted):
+        if q.over is None:
+            return ("weighted", q.weights, q.t, None)
+        pairs = sorted(
+            zip((canonical_key(m) for m in q.over), q.weights),
+            key=lambda kw: repr(kw[0]),
+        )
+        return (
+            "weighted",
+            tuple(w for _, w in pairs),
+            q.t,
+            tuple(k for k, _ in pairs),
+        )
+    if isinstance(q, (And, Or)):
+        tag = "and" if isinstance(q, And) else "or"
+        parts = []
+        for c in q.children:
+            k = canonical_key(c)
+            if k[0] == tag:  # flatten And(And(a,b),c) -> And(a,b,c)
+                parts.extend(k[1:])
+            else:
+                parts.append(k)
+        parts = _sorted_keys(set(parts))
+        if len(parts) == 1:
+            return parts[0]
+        return (tag,) + parts
+    if isinstance(q, Not):
+        k = canonical_key(q.child)
+        if k[0] == "not":
+            return k[1]
+        return ("not", k)
+    if isinstance(q, AndNot):
+        return ("andnot", canonical_key(q.keep), canonical_key(q.drop))
+    raise TypeError(f"unknown query node {type(q).__name__}")
+
+
+def column_refs(q: Query) -> frozenset | None:
+    """The set of column names a query reads, or ``None`` when any leaf has
+    an implicit ``over=None`` member set (meaning "every column at execution
+    time" -- the caller must :func:`bind_members` first to resolve it).
+    Used by the serving tier to build per-column cache version vectors."""
+    names: set = set()
+
+    def walk(x: Query) -> bool:
+        if type(x) is Col:
+            names.add(x.name)
+            return True
+        if isinstance(x, (_SymmetricLeaf, Weighted)):
+            if x.over is None:
+                return False
+            return all(walk(m) for m in x.over)
+        if isinstance(x, (And, Or)):
+            return all(walk(c) for c in x.children)
+        if isinstance(x, Not):
+            return walk(x.child)
+        if isinstance(x, AndNot):
+            return walk(x.keep) and walk(x.drop)
+        raise TypeError(f"unknown query node {type(x).__name__}")
+
+    return frozenset(names) if walk(as_query(q)) else None
 
 
 def bind_members(q: Query, names) -> Query:

@@ -30,6 +30,9 @@ key, so every index with the same schema shares both layers.
 from __future__ import annotations
 
 import dataclasses
+import math
+import weakref
+from collections import OrderedDict
 
 import jax
 import jax.numpy as jnp
@@ -40,7 +43,7 @@ from repro.core.planner import CIRCUIT_BACKENDS, Plan, plan_query
 from repro.storage import TileStore, run_tiled_circuit
 
 from .compile import build_query_circuit
-from .expr import Col, Query, Threshold, as_query
+from .expr import Col, Query, Threshold, as_query, canonical_key
 from .executors import ShardContext, run_plan
 
 __all__ = [
@@ -50,6 +53,7 @@ __all__ = [
     "circuit_for",
     "compiled_cache_info",
     "clear_compiled_cache",
+    "plan_memo_info",
 ]
 
 # ---------------------------------------------------------------------------
@@ -80,6 +84,56 @@ def clear_compiled_cache() -> None:
     clear_scan_runners()
     _CACHE_INFO["hits"] = 0
     _CACHE_INFO["misses"] = 0
+    _PLAN_MEMOS.clear()
+    _PLAN_MEMO_INFO["hits"] = 0
+    _PLAN_MEMO_INFO["misses"] = 0
+
+
+# ---------------------------------------------------------------------------
+# Plan memoization.  Hot serving paths ask the same questions of the same
+# store forever; memoize ``explain``'s answer per store (weakly -- a dropped
+# store drops its memo) keyed by the SEMANTIC query key and a coarse bucket
+# of the member statistics.  The bucket deliberately quantises (5% clean
+# fraction, decade density, pow2 dirty words): stats that land in one
+# bucket get one plan, trading exactness the planner never had for a
+# dict-lookup fast path that skips cost-model evaluation entirely.
+# ---------------------------------------------------------------------------
+
+_PLAN_MEMO_CAP = 512  # per store
+_PLAN_MEMOS: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+_PLAN_MEMO_INFO = {"hits": 0, "misses": 0}
+
+
+def plan_memo_info() -> dict:
+    """Process-wide hit/miss counters + live size of the per-store plan
+    memo (surfaced by ``QueryServer.info()`` and benchmark artifacts)."""
+    return {
+        "stores": len(_PLAN_MEMOS),
+        "entries": sum(len(v) for v in _PLAN_MEMOS.values()),
+        **_PLAN_MEMO_INFO,
+    }
+
+
+def _stats_bucket(stats) -> tuple:
+    """Quantise member statistics so equivalent stores share plan entries."""
+    dens = float(stats.density)
+    dens_band = 99 if dens <= 0 else min(12, max(0, int(-math.log10(max(dens, 1e-12)))))
+    return (
+        stats.n,
+        stats.n_words,
+        stats.tile_words,
+        int(round(stats.clean_fraction * 20)),
+        dens_band,
+        int(stats.dirty_words).bit_length(),
+        int(getattr(stats, "compressed_words", 0) or 0).bit_length(),
+    )
+
+
+def _plan_memo_for(store) -> OrderedDict:
+    memo = _PLAN_MEMOS.get(store)
+    if memo is None:
+        memo = _PLAN_MEMOS[store] = OrderedDict()
+    return memo
 
 
 def _fused_available() -> bool:
@@ -372,18 +426,47 @@ class BitmapIndex:
         """Column slots a bare-threshold query actually reads (None: all)."""
         return member_slots(q, self._slot)
 
-    def explain(self, query) -> Plan:
+    def explain(self, query, *, memo: bool = True) -> Plan:
         """The plan :meth:`execute` would run.  Plans carry ``cost`` (the
         estimated words touched) and ``candidates`` (per-backend estimates)
-        computed from the member subset's real tile statistics."""
+        computed from the member subset's real tile statistics, plus
+        ``cost_us``/``candidates_us`` when a planner calibration is
+        installed (``core.calibration``).
+
+        Answers are memoized per store, keyed by the query's *semantic* key
+        and a coarse bucket of the member statistics, so hot serving paths
+        skip planning entirely; ``plan.memo`` reports "hit"/"miss" and
+        :func:`plan_memo_info` the process-wide counters.  ``memo=False``
+        bypasses (and does not populate) the memo."""
         q = as_query(query)
         stats = self.store.member_stats(self._member_slots(q))
-        return plan_query(
-            q,
-            self.n,
-            stats=stats,
-            fused_available=_fused_available(),
+        if not memo:
+            return plan_query(
+                q, self.n, stats=stats, fused_available=_fused_available()
+            )
+        from repro.core.calibration import calibration_generation
+
+        key = (
+            canonical_key(q),
+            _stats_bucket(stats),
+            _fused_available(),
+            calibration_generation(),
         )
+        lru = _plan_memo_for(self.store)
+        cached = lru.get(key)
+        if cached is not None:
+            lru.move_to_end(key)
+            _PLAN_MEMO_INFO["hits"] += 1
+            return dataclasses.replace(cached, memo="hit")
+        _PLAN_MEMO_INFO["misses"] += 1
+        plan = plan_query(
+            q, self.n, stats=stats, fused_available=_fused_available()
+        )
+        plan.memo = "miss"
+        lru[key] = plan
+        while len(lru) > _PLAN_MEMO_CAP:
+            lru.popitem(last=False)
+        return plan
 
     # -- execution ---------------------------------------------------------
     def execute(self, query, *, backend: str | None = None,

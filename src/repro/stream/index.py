@@ -105,6 +105,18 @@ class StreamingIndex:
         self._version = 0
         self._overlay_cache: tuple | None = None  # (version, index)
         self.compactions = 0
+        #: per-column mutation versions: the index version at which each
+        #: column's *contents* last changed (compaction bumps the index
+        #: version but changes no contents, so column versions hold still).
+        #: A materialized view's version bumps when any support column is
+        #: mutated -- at mutation time, not at its lazy refresh -- so a
+        #: version vector read after a bump never covers stale view bits.
+        self._col_versions: dict[str, int] = {n: 0 for n in self._names}
+        #: invalidation subscribers: fn(version, frozenset[column names])
+        #: called once per mutation batch with every column whose contents
+        #: changed (views cascaded).  The serving result cache tier hangs
+        #: its invalidation off this.
+        self._subscribers: list = []
         #: durability state: a WAL every mutation batch appends to before
         #: applying, plus the directory checkpoints land in.  ``None``
         #: keeps the index purely in-memory (the default).
@@ -334,10 +346,60 @@ class StreamingIndex:
                     view.pending.update(tiles)
             if appended:
                 view.pending.update(appended)
+        # column-version bookkeeping + invalidation fan-out: the mutated
+        # columns change now, and every view (transitively) reading one of
+        # them WILL change at its next refresh -- bump both at mutation
+        # time so version vectors read later are never stale
+        changed = set(touched)
+        for _ in range(len(self._views) + 1):
+            grew = {
+                v.slot
+                for v in self._views.values()
+                if v.slot not in changed and (appended or v.support & changed)
+            }
+            if not grew:
+                break
+            changed |= grew
+        for slot in changed:
+            self._col_versions[self._names[slot]] = self._version
+        self._notify(frozenset(self._names[s] for s in changed))
         if self.policy.auto:
             base_words = self._base_working_words()
             if self.policy.should_compact(self.delta_words, base_words):
                 self.compact()
+
+    # -- version / invalidation surface ------------------------------------
+    @property
+    def version(self) -> int:
+        """Monotone index version (one bump per mutation batch / refresh /
+        compaction)."""
+        return self._version
+
+    @property
+    def column_versions(self) -> dict:
+        """{name: version its contents last changed} -- the serving cache
+        tier's key material."""
+        return dict(self._col_versions)
+
+    def column_version(self, name: str) -> int:
+        if name not in self._slot:
+            raise KeyError(f"unknown column {name!r}")
+        return self._col_versions.get(name, 0)
+
+    def subscribe(self, fn) -> None:
+        """Register ``fn(version, touched_names)`` to run after every
+        mutation batch; ``touched_names`` is a frozenset of every column
+        whose contents changed, materialized views cascaded in."""
+        self._subscribers.append(fn)
+
+    def unsubscribe(self, fn) -> None:
+        self._subscribers.remove(fn)
+
+    def _notify(self, names: frozenset) -> None:
+        if not names:
+            return
+        for fn in list(self._subscribers):
+            fn(self._version, names)
 
     def _base_working_words(self) -> int:
         if self._sharded:
@@ -449,6 +511,8 @@ class StreamingIndex:
         )
         self._views[name] = view
         self._version += 1
+        self._col_versions[name] = self._version  # the column just appeared
+        self._notify(frozenset((name,)))
         return view
 
     def view_info(self, name: str) -> dict | None:

@@ -318,3 +318,147 @@ def test_planner_picks_min_cost_candidate():
     assert p.algorithm == "fused", p
     # scalar path (no stats) keeps the documented default rules
     assert plan_threshold(16, 8, fused_available=False).algorithm == "ssum"
+
+
+# ---------------------------------------------------------------------------
+# Feedback-calibrated planner (core.calibration)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture()
+def _no_calibration():
+    """Tests below install calibrations; never leak one into other tests."""
+    from repro.core.calibration import clear_calibration
+
+    clear_calibration()
+    yield
+    clear_calibration()
+
+
+def test_identity_calibration_never_inverts_words_ranking(_no_calibration):
+    """Regression anchor: a uniform words->us rate must reproduce the raw
+    words-touched ranking exactly -- same chosen backend, and every
+    candidate's calibrated price a fixed rescale of its words price -- at
+    clean fractions 0.0 / 0.5 / 0.95."""
+    from repro.core.calibration import Calibration, clear_calibration, set_calibration
+    from repro.query import BitmapIndex
+
+    n, n_tiles = 8, 8
+    for cf in (0.0, 0.5, 0.95):
+        bits = _bench_clean_fraction_bits(n, n_tiles, cf, seed=int(cf * 100) + 1)
+        idx = BitmapIndex.from_dense(jnp.asarray(bits))
+        stats = idx.store.member_stats(None)
+        clear_calibration()
+        base = plan_threshold(n, n // 2, stats=stats, fused_available=True)
+        assert base.cost_us is None and base.candidates_us == ()
+
+        set_calibration(Calibration.identity(ALGORITHMS))
+        calibrated = plan_threshold(n, n // 2, stats=stats, fused_available=True)
+        assert calibrated.algorithm == base.algorithm, (cf, base, calibrated)
+        words = dict(calibrated.candidates)
+        assert calibrated.candidates_us, cf
+        for backend, us in calibrated.candidates_us:
+            assert us == pytest.approx(words[backend] / 1024.0), (cf, backend)
+        # the µs list is sorted: a backend that touches fewer words is
+        # never priced above one that touches more
+        prices = [us for _, us in calibrated.candidates_us]
+        assert prices == sorted(prices)
+        assert calibrated.cost_us == pytest.approx(
+            calibrated.cost / 1024.0
+        ), (cf, calibrated)
+
+
+def test_skewed_calibration_steers_selection(_no_calibration):
+    """The point of calibration: when measurement says the words-best
+    backend is slow on this device, the planner picks the measured-fast
+    one (and says so in the rationale)."""
+    from repro.core.calibration import Calibration, set_calibration
+    from repro.query import BitmapIndex
+
+    n, n_tiles = 8, 8
+    bits = _bench_clean_fraction_bits(n, n_tiles, 0.0, seed=1)
+    idx = BitmapIndex.from_dense(jnp.asarray(bits))
+    stats = idx.store.member_stats(None)
+    base = plan_threshold(n, n // 2, stats=stats, fused_available=True)
+    others = [b for b, _ in base.candidates if b not in (base.algorithm, "tiled_fused")]
+    assert others, base
+
+    skew = Calibration.identity(ALGORITHMS)
+    skew.us_per_kword[base.algorithm] = 1e6  # "measured" terrible
+    set_calibration(skew)
+    steered = plan_threshold(n, n // 2, stats=stats, fused_available=True)
+    assert steered.algorithm != base.algorithm, steered
+    assert steered.algorithm in others
+    assert "calibrated" in steered.rationale
+
+
+def test_calibration_cost_us_monotone_in_words():
+    from repro.core.calibration import Calibration
+
+    c = Calibration(device="x", us_per_kword={"ssum": 3.0}, dispatch_us={"ssum": 50.0})
+    prices = [c.cost_us("ssum", w) for w in (0, 1024, 4096, 1 << 20)]
+    assert prices == sorted(prices) and prices[0] == 50.0
+    assert c.cost_us("nope", 1024) is None
+    assert c.cost_us("ssum", None) is None
+
+
+def test_calibration_observe_ewma_and_clamp():
+    from repro.core.calibration import Calibration
+
+    c = Calibration.identity(("ssum",))
+    c.observe("ssum", 1024, 1.0)  # absurd 1s observation: clamped to 8x
+    assert c.us_per_kword["ssum"] == pytest.approx(0.8 * 1.0 + 0.2 * 8.0)
+    assert c.samples["ssum"] == 1
+    # unknown backends are admitted at the observed rate
+    c.observe("looped", 1024, 1e-6)
+    assert c.us_per_kword["looped"] == pytest.approx(1.0)
+    # junk observations are ignored
+    before = dict(c.us_per_kword)
+    c.observe("ssum", None, 1.0)
+    c.observe("ssum", 0, 1.0)
+    c.observe("ssum", 1024, 0.0)
+    assert c.us_per_kword == before
+
+
+def test_calibration_persist_roundtrip(tmp_path, _no_calibration):
+    from repro.core.calibration import Calibration, get_calibration
+    from repro.persist import load_calibration, save_calibration
+    from repro.persist.calibration import ensure_calibration
+
+    c = Calibration(device="identity", us_per_kword={"ssum": 2.5, "fused": 0.5},
+                    dispatch_us={"fused": 40.0}, samples={"ssum": 3})
+    target = save_calibration(c, tmp_path)
+    assert target.name == "calibration.json"
+    back = load_calibration(tmp_path)
+    assert back is not None and back.to_obj() == c.to_obj()
+
+    # device-mismatched constants are stale: refuse unless asked
+    c2 = Calibration(device="some_tpu", us_per_kword={"ssum": 9.0})
+    save_calibration(c2, tmp_path / "other")
+    assert load_calibration(tmp_path / "other") is None
+    loose = load_calibration(tmp_path / "other", allow_mismatch=True)
+    assert loose is not None and loose.us_per_kword["ssum"] == 9.0
+
+    # ensure_calibration: load-or-measure, installs as process-active
+    got = ensure_calibration(tmp_path, repeats=1, n_words=256)
+    assert got.to_obj() == c.to_obj()  # loaded, not re-measured
+    assert get_calibration() is got
+
+
+def test_plan_memo_invalidated_by_calibration_swap(_no_calibration):
+    """Swapping calibration constants must not serve stale memoized plans:
+    the memo key embeds the calibration generation."""
+    from repro.core.calibration import Calibration, set_calibration
+    from repro.query import BitmapIndex, clear_compiled_cache
+
+    clear_compiled_cache()
+    idx = BitmapIndex.from_dense(jnp.asarray(_mk(8, 300, 0.3, seed=4)[0]))
+    q = Threshold(4)
+    assert idx.explain(q).memo == "miss"
+    assert idx.explain(q).memo == "hit"
+    set_calibration(Calibration.identity(ALGORITHMS))
+    fresh = idx.explain(q)
+    assert fresh.memo == "miss", "stale pre-calibration plan served"
+    assert fresh.cost_us is not None
+    assert idx.explain(q).memo == "hit"
+    clear_compiled_cache()
