@@ -19,6 +19,10 @@ Prints ``name,value,derived`` CSV lines.  Sections:
               across client counts, cache/dedup/shed rates, batch-size
               histogram, plan-memo + calibration counters (repro.serve;
               smoke sizes, writes BENCH_serve.json)
+  obs      -- observability overhead: metrics+tracing ON vs OFF per-query
+              cost, disabled-site cost, drift sample counts, Prometheus
+              scrape lint (repro.obs; writes BENCH_obs.json and the
+              BENCH_obs_trace.jsonl span-tree artifact)
   roofline -- three-term roofline per dry-run cell (deliverable g; requires
               artifacts/dryrun from ``python -m repro.launch.dryrun``)
 """
@@ -29,7 +33,7 @@ import traceback
 
 
 def main() -> None:
-    sections = sys.argv[1:] or ["table5", "table7", "fig3", "table10", "heatmap", "kernel", "weighted", "query", "stream", "persist", "serve", "roofline"]
+    sections = sys.argv[1:] or ["table5", "table7", "fig3", "table10", "heatmap", "kernel", "weighted", "query", "stream", "persist", "serve", "obs", "roofline"]
     failures = 0
     for section in sections:
         print(f"# --- {section} ---")
@@ -76,6 +80,10 @@ def main() -> None:
                 rows = mod.run(smoke=True)
             elif section == "serve":
                 from benchmarks import serve_bench as mod
+
+                rows = mod.run(smoke=True)
+            elif section == "obs":
+                from benchmarks import obs_bench as mod
 
                 rows = mod.run(smoke=True)
             elif section == "roofline":

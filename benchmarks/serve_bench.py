@@ -13,11 +13,13 @@ headline number is queries/second, not single-query wall time:
     shape-bucketed micro-batches, semantic dedup, the version-keyed
     result cache, calibration feedback.
 
-Writes ``BENCH_serve.json``: QPS per client count, batch-size histogram,
-cache-hit / dedup / shed rates, plan-memo counters, measured calibration
-constants, and an oracle spot-check flag (every distinct pool query served
-bit-identical to direct execution).  The smoke config asserts the
-coalesced front-end clears >= 3x sequential QPS at >= 8 clients.
+Writes ``BENCH_serve.json``: QPS per client count, p50/p95/p99 request
+latency and queue wait (from the server's metrics-registry histograms),
+batch-size histogram, cache-hit / dedup / shed rates, plan-memo counters,
+measured calibration constants, and an oracle spot-check flag (every
+distinct pool query served bit-identical to direct execution).  The smoke
+config asserts the coalesced front-end clears >= 3x sequential QPS at
+>= 8 clients and that p99 latency is finite and reported.
 """
 from __future__ import annotations
 
@@ -200,6 +202,10 @@ def run(smoke: bool = True):
             "batches": info["batches"],
             "batch_size_hist": info["batch_size_hist"],
             "plan_memo": info["plan_memo"],
+            # request latency + queue wait from the server's metrics
+            # registry histograms (exact-merge log-bucketed percentiles)
+            "latency_s": info["latency"],
+            "queue_wait_s": info["queue_wait"],
         }
         data["sweep"].append(point)
         rows.append(
@@ -207,7 +213,16 @@ def run(smoke: bool = True):
                 f"serve_qps_c{clients}",
                 qps,
                 f"{qps / seq_qps:.1f}x seq; cache {point['cache_hit_rate']:.0%} "
-                f"dedup {point['dedup_rate']:.0%} exec {info['executed']}",
+                f"dedup {point['dedup_rate']:.0%} exec {info['executed']} "
+                f"p99 {info['latency']['p99_s'] * 1e3:.2f}ms",
+            )
+        )
+        rows.append(
+            (
+                f"serve_p99_ms_c{clients}",
+                info["latency"]["p99_s"] * 1e3,
+                f"p50 {info['latency']['p50_s'] * 1e3:.2f}ms queue-wait p99 "
+                f"{info['queue_wait']['p99_s'] * 1e3:.2f}ms",
             )
         )
         if clients >= 8 and speedup_at_8 is None:
@@ -222,6 +237,15 @@ def run(smoke: bool = True):
             f"coalesced front-end only {speedup_at_8:.2f}x sequential at >=8 "
             f"clients (need >= {MIN_SPEEDUP_AT_8}x)"
         )
+    if smoke:
+        import math
+
+        for point in data["sweep"]:
+            p99 = point["latency_s"]["p99_s"]
+            assert math.isfinite(p99) and p99 > 0, (
+                f"p99 latency not finite at {point['clients']} clients: {p99}"
+            )
+            assert point["latency_s"]["count"] > 0, "latency histogram empty"
     set_calibration(None)
     clear_compiled_cache()
     return rows

@@ -445,6 +445,48 @@ class ShardedBitmapIndex:
         return lambda: circuit_for(qs, self.n, self._names)
 
     def _execute_circuit(self, qs: tuple, qlist, backend, block_words) -> list:
+        import time as _time
+
+        import repro.obs as _obs
+        from repro.obs import trace as _trace
+
+        active = _trace.enabled or _obs.REGISTRY.enabled
+        t0 = _time.perf_counter() if active else 0.0
+        with _trace.span(
+            "execute_sharded", n_shards=self.n_shards, n_queries=len(qlist)
+        ) as root:
+            out = self._execute_circuit_inner(
+                qs, qlist, backend, block_words
+            )
+            if active:
+                self._observe(root, _time.perf_counter() - t0)
+        return out
+
+    def _observe(self, root, wall_s: float) -> None:
+        """Predicted-vs-measured accounting for the whole sharded call."""
+        import repro.obs as _obs
+
+        info = self.last_info or {}
+        measured = info.get("words_touched")
+        plans = getattr(self, "_last_plans", None)
+        costs = [
+            p.cost for p in (plans.plans if plans else ())
+            if getattr(p, "cost", None) is not None
+        ]
+        backends = sorted(set(info.get("backends", ())))
+        label = backends[0] if len(backends) == 1 else "mixed"
+        root.set(
+            mode=info.get("mode"),
+            backends=backends,
+            predicted_words=sum(costs) if costs else None,
+            measured_words=measured,
+        )
+        if measured is not None:
+            _obs.record_drift(
+                label, sum(costs) if costs else None, measured, wall_s
+            )
+
+    def _execute_circuit_inner(self, qs: tuple, qlist, backend, block_words) -> list:
         circ_fn = self._circuit_fn(qs)
         if backend is not None:
             plans = ShardedPlan(
@@ -470,6 +512,7 @@ class ShardedBitmapIndex:
                              cost=p.cost, candidates=p.candidates)
                 shard_plans.append(p)
             plans = ShardedPlan(tuple(shard_plans))
+        self._last_plans = plans
         k = len(qlist)
         spmd = _shard_map()
         if (
@@ -518,8 +561,11 @@ class ShardedBitmapIndex:
     def _run_per_shard(self, circ_fn, qlist, plans: ShardedPlan, block_words) -> list:
         """Heterogeneous path: each shard's plan dispatches through the one
         run_plan entrypoint against that shard's local representation."""
+        from repro.obs import trace as _trace
+        from repro.query.execinfo import merge_exec_infos
         from repro.query.executors import ShardContext, run_plan
         from repro.query.expr import Col
+        from repro.query.index import _annotate_dispatch
 
         bare = self._bare_slots(qlist[0]) if len(qlist) == 1 else None
         colslot = (
@@ -539,7 +585,12 @@ class ShardedBitmapIndex:
                 column=colslot,
                 block_words=block_words,
             )
-            out, info = run_plan(ctx, plan)
+            with _trace.span(
+                "shard", shard=i, backend=getattr(plan, "algorithm", plan)
+            ) as sp:
+                out, info = run_plan(ctx, plan)
+                if _trace.enabled and isinstance(info, dict):
+                    _annotate_dispatch(sp, info)
             infos.append(info)
             if out.ndim == 1:
                 out = out[None]
@@ -548,35 +599,16 @@ class ShardedBitmapIndex:
             per_shard.append(
                 [self._mask_shard(out[j], i) for j in range(k)]
             )
+        # schema-driven merge (repro.query.execinfo): EVERY ExecInfo key is
+        # folded by its registered rule -- counters sum, word-kind dicts add
+        # key-wise, labels collect -- so a counter added to any backend can
+        # never again be silently dropped on the sharded path
         self.last_info = {
+            **merge_exec_infos(infos),
             "mode": "per_shard",
             "backends": plans.backends,
             "n_shards": self.n_shards,
             "per_shard": infos,
-            "dirty_words_gathered": sum(
-                i["dirty_words_gathered"] for i in infos if i
-            ),
-            "launches": sum(i["launches"] for i in infos if i),
-            # container-native accounting (tiled shards only): storage
-            # words read compressed + tiles resolved without densification
-            "compressed_words_gathered": sum(
-                i.get("compressed_words_gathered", 0) for i in infos if i
-            ),
-            "event_tiles": sum(i.get("event_tiles", 0) for i in infos if i),
-            "densified_tiles": sum(
-                i.get("densified_tiles", 0) for i in infos if i
-            ),
-            "decode_words": sum(i.get("decode_words", 0) for i in infos if i),
-            # per-kind storage-word breakdown, summed across shards (zeros
-            # when no shard ran tiled)
-            "words_by_kind": {
-                kind: sum(
-                    i.get("words_by_kind", {}).get(kind, 0)
-                    for i in infos
-                    if i
-                )
-                for kind in ("dense", "sparse", "run")
-            },
         }
         return per_shard
 

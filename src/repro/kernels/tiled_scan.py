@@ -65,6 +65,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import circuits as _ckt
+from repro.obs import REGISTRY as _OBS
 
 __all__ = [
     "block_runner",
@@ -76,6 +77,27 @@ __all__ = [
 ]
 
 _U32 = jnp.uint32
+
+# dispatch accounting on the process registry (no-op until obs.enable()):
+# launches per stage kind, words the decode prologue stages, and event
+# toggles merged -- the device-side counterpart of ExecInfo's per-query
+# numbers, aggregated process-wide across every store and query
+_LAUNCHES = _OBS.counter(
+    "repro_kernel_launches_total", "Device kernel dispatches", ("stage",),
+)
+_DECODE_WORDS = _OBS.counter(
+    "repro_kernel_decode_words_total",
+    "Dense-equivalent words staged by the in-kernel container decode",
+)
+_EVENT_TOGGLES = _OBS.counter(
+    "repro_kernel_event_toggles_total",
+    "Boundary toggles merged by the event stage",
+)
+# label keys pre-bound once: the launch loop incs these per dispatch
+_LAUNCH_BLOCK = _LAUNCHES.bind(stage="block")
+_LAUNCH_EVENT = _LAUNCHES.bind(stage="event")
+_DECODE_WORDS_B = _DECODE_WORDS.bind()
+_EVENT_TOGGLES_B = _EVENT_TOGGLES.bind()
 
 #: test hook: evaluate the block stage through the Pallas grid kernel even
 #: in interpret mode (CPU), pinning the grid kernel against the XLA scan.
@@ -256,7 +278,14 @@ def block_runner(circuits: tuple, m_max: int, k_max: int, tw: int,
         out = base.reshape(-1, tw).at[dst].set(ys.reshape(-1, tw))
         return out.reshape(base.shape)
 
-    fn = jax.jit(run)
+    jitted = jax.jit(run)
+
+    def fn(base, gids, dense_pack1, cell_src, *rest):
+        if _OBS.enabled:
+            _LAUNCH_BLOCK.inc(1)
+            _DECODE_WORDS_B.inc((cell_src.shape[0] - 1) * tw)
+        return jitted(base, gids, dense_pack1, cell_src, *rest)
+
     if len(_RUNNERS) >= _RUNNERS_CAP:
         _RUNNERS.popitem(last=False)
     _RUNNERS[key] = fn
@@ -341,7 +370,14 @@ def event_runner(k_max: int, mm: int, tw: int):
             base_flat = base_flat.at[out_dst[j]].set(words)
         return base_flat.reshape(base.shape)
 
-    fn = jax.jit(run)
+    jitted = jax.jit(run)
+
+    def fn(base, keys, *rest):
+        if _OBS.enabled:
+            _LAUNCH_EVENT.inc(1)
+            _EVENT_TOGGLES_B.inc(keys.shape[0])
+        return jitted(base, keys, *rest)
+
     if len(_RUNNERS) >= _RUNNERS_CAP:
         _RUNNERS.popitem(last=False)
     _RUNNERS[key] = fn

@@ -30,7 +30,18 @@ from collections import OrderedDict
 
 import numpy as np
 
+from repro.obs import REGISTRY as _OBS
+
 __all__ = ["PagedTileStore"]
+
+# Page-cache accounting mirrored onto the process-wide registry (no-ops
+# until ``repro.obs.enable()``); the instance attributes below stay the
+# exact-count source of truth for existing callers.
+_PAGE_EVENTS = _OBS.counter(
+    "repro_persist_page_events_total",
+    "Paged tile-store cache events (hit / miss / eviction / densify)",
+    ("event",),
+)
 
 
 class PagedTileStore:
@@ -116,6 +127,7 @@ class PagedTileStore:
         tiles = np.asarray(tiles, np.int64)
         out = np.empty((cols.size, self.tile_words), np.uint32)
         miss_rows = []
+        evicted = 0
         for i, key in enumerate(zip(cols.tolist(), tiles.tolist())):
             got = self._cache.get(key)
             if got is not None:
@@ -135,6 +147,15 @@ class PagedTileStore:
                 if len(self._cache) > self._capacity:
                     self._cache.popitem(last=False)
                     self.evictions += 1
+                    evicted += 1
+        if _OBS.enabled:
+            n_miss = len(miss_rows)
+            if cols.size - n_miss:
+                _PAGE_EVENTS.inc(cols.size - n_miss, event="hit")
+            if n_miss:
+                _PAGE_EVENTS.inc(n_miss, event="miss")
+            if evicted:
+                _PAGE_EVENTS.inc(evicted, event="eviction")
         return out
 
     def gather_events(self, cols, tiles):
@@ -145,6 +166,7 @@ class PagedTileStore:
     # -- dense-path escape hatches (counted) -------------------------------
     def densify(self):
         self.full_materializations += 1
+        _PAGE_EVENTS.inc(1, event="densify")
         return self._base.densify()
 
     def column(self, i: int):

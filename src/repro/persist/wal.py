@@ -25,10 +25,27 @@ from __future__ import annotations
 
 import json
 import struct
+import time as _time
 import zlib
 from pathlib import Path
 
 import numpy as np
+
+from repro.obs import REGISTRY as _OBS_REGISTRY
+
+# WAL durability accounting (no-ops until ``repro.obs.enable()``): append
+# latency is the write+flush(+fsync) critical path every mutation batch
+# sits on before it applies.
+_WAL_APPENDS = _OBS_REGISTRY.counter(
+    "repro_wal_appends_total", "WAL records appended", ("fsync",),
+)
+_WAL_BYTES = _OBS_REGISTRY.counter(
+    "repro_wal_bytes_total", "WAL bytes written (payload + framing)",
+)
+_WAL_APPEND_S = _OBS_REGISTRY.histogram(
+    "repro_wal_append_seconds", "WAL append latency (write+flush+fsync)",
+    ("fsync",),
+)
 
 __all__ = [
     "WriteAheadLog",
@@ -231,6 +248,8 @@ class WriteAheadLog:
 
     # -- appends -----------------------------------------------------------
     def _append(self, kind: int, body: bytes) -> int:
+        _OBS = _OBS_REGISTRY
+        t0 = _time.perf_counter() if _OBS.enabled else 0.0
         self.last_version += 1
         payload = struct.pack("<BQ", kind, self.last_version) + body
         self._f.write(struct.pack(
@@ -243,6 +262,12 @@ class WriteAheadLog:
 
             os.fsync(self._f.fileno())
         self.records += 1
+        if _OBS.enabled:
+            _WAL_APPENDS.inc(1, fsync=self.fsync)
+            _WAL_BYTES.inc(len(payload) + 8)
+            _WAL_APPEND_S.observe(
+                _time.perf_counter() - t0, fsync=self.fsync
+            )
         return self.last_version
 
     def append_update(self, cols, pos, on) -> int:

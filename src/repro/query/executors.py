@@ -36,6 +36,7 @@ import numpy as np
 
 from repro.core.bitmaps import WORD_DTYPE, from_positions, to_positions_np
 from repro.core.planner import CIRCUIT_BACKENDS
+from repro.query.execinfo import make_exec_info
 
 __all__ = [
     "THRESHOLD_BACKENDS",
@@ -127,19 +128,49 @@ class ShardContext:
         return rows
 
 
+def _dense_exec_info(backend: str, engine: str, n_rows: int, out,
+                     launches: int = 1) -> dict:
+    """ExecInfo for a backend that reads every member row densely.
+
+    ``words_touched`` is the roofline traffic term: N input rows read plus
+    each output row written, all at the shard's word width.
+    """
+    k = 1 if out.ndim == 1 else out.shape[0]
+    nw = int(out.shape[-1])
+    total = n_rows * nw + k * nw
+    return make_exec_info(
+        backend,
+        engine=engine,
+        n_outputs=k,
+        total_words=total,
+        words_touched=total,
+        dirty_words_gathered=n_rows * nw,
+        words_by_kind={"dense": n_rows * nw},
+        launches=launches,
+        work_fraction=1.0,
+    )
+
+
 def run_plan(ctx: ShardContext, plan):
     """THE executor entrypoint: run one plan against one shard's data.
 
     ``plan`` is a ``core.planner.Plan`` or a backend name.  Returns
-    ``(packed result, info | None)`` -- ``info`` is the tiled executor's
-    case-split accounting when it ran, else None.  Every backend resolves
-    through here; callers own device placement, backends own compute.
+    ``(packed result, info)`` -- ``info`` is an ExecInfo
+    (:mod:`repro.query.execinfo`): the tiled executor's case-split
+    accounting when it ran, a dense-traffic accounting for every other
+    backend.  Every backend resolves through here; callers own device
+    placement, backends own compute.
     """
     alg = getattr(plan, "algorithm", plan)
     if alg == "column":
         if ctx.column is None:
             raise ValueError("'column' plan without a column slot in the context")
-        return ctx.dense()[ctx.column], None
+        out = ctx.dense()[ctx.column]
+        nw = int(out.shape[-1])
+        return out, make_exec_info(
+            "column", engine="view", total_words=nw, words_touched=nw,
+            words_by_kind={"dense": nw}, launches=0, work_fraction=1.0,
+        )
     if alg == "tiled_fused":
         if ctx.store is None or ctx.circuit is None:
             raise ValueError("'tiled_fused' needs a tile store and a compiled circuit")
@@ -151,27 +182,26 @@ def run_plan(ctx: ShardContext, plan):
         )
         return out, info
     if alg in THRESHOLD_BACKENDS and ctx.bare is not None:
-        return (
-            run_threshold_backend(
-                ctx.member_rows(), ctx.bare[1], alg, block_words=ctx.block_words
-            ),
-            None,
+        rows = ctx.member_rows()
+        out = run_threshold_backend(
+            rows, ctx.bare[1], alg, block_words=ctx.block_words
         )
+        engine = "host" if alg == "dsk" else "dense"
+        return out, _dense_exec_info(alg, engine, int(rows.shape[0]), out)
     if alg in CIRCUIT_BACKENDS:
         from repro.kernels.threshold_ssum import INTERPRET, run_circuit_cached
 
         if ctx.circuit is None:
             raise ValueError(f"backend {alg!r} needs a compiled circuit in the context")
-        return (
-            run_circuit_cached(
-                ctx.dense(),
-                ctx.circuit(),
-                block_words=ctx.block_words,
-                interpret=INTERPRET,
-                pallas=alg == "fused",
-            ),
-            None,
+        rows = ctx.dense()
+        out = run_circuit_cached(
+            rows,
+            ctx.circuit(),
+            block_words=ctx.block_words,
+            interpret=INTERPRET,
+            pallas=alg == "fused",
         )
+        return out, _dense_exec_info(alg, "dense", int(rows.shape[0]), out)
     if alg in THRESHOLD_BACKENDS:
         raise ValueError(
             f"backend {alg!r} only executes bare Threshold queries; "

@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time as _time
 import weakref
 from collections import OrderedDict
 
@@ -38,8 +39,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro.obs as _obs
 from repro.core.bitmaps import WORD_DTYPE, cardinality, pack, packed_tail_mask
 from repro.core.planner import CIRCUIT_BACKENDS, Plan, plan_query
+from repro.obs import trace as _trace
 from repro.storage import TileStore, run_tiled_circuit
 
 from .compile import build_query_circuit
@@ -178,11 +181,49 @@ def circuit_for(qs: tuple, n: int, names: tuple):
     circ = _CIRCUITS.get(key)
     if circ is not None:
         _CACHE_INFO["hits"] += 1
+        if _trace.enabled:
+            # steady-state hit: annotate the open span instead of paying a
+            # zero-duration child span per request
+            _trace.current_span().set(compile_cache="hit")
         return circ
     _CACHE_INFO["misses"] += 1
-    circ = build_query_circuit(qs, n, names)
+    with _trace.span("compile", cache="miss") as sp:
+        circ = build_query_circuit(qs, n, names)
+        sp.set(n_outputs=len(getattr(circ, "outputs", ())) or len(qs))
     _CIRCUITS[key] = circ
     return circ
+
+
+def _annotate_dispatch(sp, info: dict) -> None:
+    """Copy an ExecInfo's dispatch + decode accounting onto the span tree:
+    the dispatch span carries the engine / launch / case-split numbers, a
+    child ``decode`` span the container-decode traffic (decode happens
+    inside the kernel, so its span carries words rather than wall time).
+    Backends that never decode containers (dense / host paths) carry their
+    word accounting directly on the dispatch span instead of an all-zero
+    decode child."""
+    sp.set(
+        engine=info.get("engine"),
+        launches=info.get("launches"),
+        case3_tiles=info.get("case3_tiles"),
+        const_tiles=info.get("const_tiles"),
+        event_tiles=info.get("event_tiles"),
+        measured_words=info.get("words_touched"),
+    )
+    if info.get("backend") != "tiled_fused":
+        sp.set(
+            dirty_words_gathered=info.get("dirty_words_gathered"),
+            words_by_kind=dict(info.get("words_by_kind") or {}),
+        )
+        return
+    with _trace.span("decode") as dec:
+        dec.set(
+            decode_words=info.get("decode_words"),
+            densified_tiles=info.get("densified_tiles"),
+            compressed_words_gathered=info.get("compressed_words_gathered"),
+            dirty_words_gathered=info.get("dirty_words_gathered"),
+            words_by_kind=dict(info.get("words_by_kind") or {}),
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -439,6 +480,19 @@ class BitmapIndex:
         :func:`plan_memo_info` the process-wide counters.  ``memo=False``
         bypasses (and does not populate) the memo."""
         q = as_query(query)
+        with _trace.span("plan") as sp:
+            plan = self._explain(q, memo)
+            if _trace.enabled:
+                sp.set(
+                    algorithm=plan.algorithm,
+                    memo=plan.memo,
+                    predicted_words=plan.cost,
+                    predicted_us=plan.cost_us,
+                    candidates=plan.candidates or (),
+                )
+        return plan
+
+    def _explain(self, q: Query, memo: bool) -> Plan:
         stats = self.store.member_stats(self._member_slots(q))
         if not memo:
             return plan_query(
@@ -471,10 +525,40 @@ class BitmapIndex:
     # -- execution ---------------------------------------------------------
     def execute(self, query, *, backend: str | None = None,
                 block_words: int | None = None) -> jax.Array:
-        """Evaluate one expression; returns a packed (tail-masked) bitmap."""
+        """Evaluate one expression; returns a packed (tail-masked) bitmap.
+
+        With :mod:`repro.obs` enabled, each call produces a span tree
+        (plan / compile / dispatch / decode) carrying the plan's predicted
+        words next to the executor's measured words, and records one
+        calibration-drift observation."""
         q = as_query(query)
-        plan = Plan(backend, "caller override") if backend else self.explain(q)
-        return self._mask(self._run(q, plan.algorithm, block_words))
+        active = _trace.enabled or _obs.REGISTRY.enabled
+        t0 = _time.perf_counter() if active else 0.0
+        with _trace.span("execute") as root:
+            plan = Plan(backend, "caller override") if backend else self.explain(q)
+            out = self._mask(self._run(q, plan.algorithm, block_words))
+            if active:
+                self._observe(root, plan, self.last_info,
+                              _time.perf_counter() - t0)
+        return out
+
+    def _observe(self, root, plan, info, wall_s: float) -> None:
+        """Annotate the root span with predicted vs measured words and feed
+        the drift metric (called with obs tracing or metrics enabled)."""
+        measured = (
+            info.get("words_touched") if isinstance(info, dict) else None
+        )
+        if _trace.enabled:
+            root.set(
+                backend=plan.algorithm,
+                predicted_words=plan.cost,
+                predicted_us=plan.cost_us,
+                measured_words=measured,
+            )
+        _obs.record_drift(
+            str(plan.algorithm), plan.cost,
+            measured if measured is not None else 0, wall_s,
+        )
 
     def execute_many(self, queries, *, backend: str | None = None,
                      block_words: int | None = None) -> list:
@@ -482,41 +566,91 @@ class BitmapIndex:
         into a single multi-output circuit.  On the tiled path every query
         shares ONE dirty-tile gather; on the dense path, one jitted call."""
         qs = [as_query(q) for q in queries]
-        algs = [backend or self.explain(q).algorithm for q in qs]
-        batch: list[int] = []
-        # an explicit non-circuit backend override is honoured per query;
-        # batching only applies when the circuit family does the work
-        if backend is None or backend in CIRCUIT_BACKENDS:
-            for i, (q, alg) in enumerate(zip(qs, algs)):
-                if alg in CIRCUIT_BACKENDS or (
-                    alg in _BATCHABLE and self._bare_threshold(q) is not None
-                ):
-                    batch.append(i)
-        results: dict[int, jax.Array] = {}
-        if len(batch) > 1:
-            tiled = backend == "tiled_fused" or (
-                backend is None and all(algs[i] == "tiled_fused" for i in batch)
-            )
-            if tiled:
-                circ = self._circuit_for(tuple(qs[i] for i in batch))
-                stacked, info = run_tiled_circuit(
-                    self.store, circ, block_words=block_words
+        active = _trace.enabled or _obs.REGISTRY.enabled
+        t0 = _time.perf_counter() if active else 0.0
+        with _trace.span("execute_many", n_queries=len(qs)) as root:
+            plans = [
+                Plan(backend, "caller override") if backend else self.explain(q)
+                for q in qs
+            ]
+            algs = [p.algorithm for p in plans]
+            batch: list[int] = []
+            # an explicit non-circuit backend override is honoured per query;
+            # batching only applies when the circuit family does the work
+            if backend is None or backend in CIRCUIT_BACKENDS:
+                for i, (q, alg) in enumerate(zip(qs, algs)):
+                    if alg in CIRCUIT_BACKENDS or (
+                        alg in _BATCHABLE and self._bare_threshold(q) is not None
+                    ):
+                        batch.append(i)
+            results: dict[int, jax.Array] = {}
+            if len(batch) > 1:
+                tiled = backend == "tiled_fused" or (
+                    backend is None and all(algs[i] == "tiled_fused" for i in batch)
                 )
-                self.last_info = info
+                if tiled:
+                    tdisp = _time.perf_counter() if active else 0.0
+                    with _trace.span(
+                        "dispatch", backend="tiled_fused", batched=len(batch)
+                    ) as sp:
+                        circ = self._circuit_for(tuple(qs[i] for i in batch))
+                        stacked, info = run_tiled_circuit(
+                            self.store, circ, block_words=block_words
+                        )
+                        if _trace.enabled:
+                            _annotate_dispatch(sp, info)
+                    self.last_info = info
+                    if active:
+                        # one drift sample for the shared gather: the batch's
+                        # summed prediction vs the one realised gather
+                        bc = [plans[i].cost for i in batch]
+                        pred = (
+                            sum(c for c in bc if c is not None)
+                            if any(c is not None for c in bc) else None
+                        )
+                        _obs.record_drift(
+                            "tiled_fused", pred, info["words_touched"],
+                            _time.perf_counter() - tdisp,
+                        )
+                else:
+                    cbackend = backend or ("fused" if _fused_available() else "circuit")
+                    with _trace.span(
+                        "dispatch", backend=cbackend, batched=len(batch)
+                    ):
+                        stacked = self._dense_eval(
+                            tuple(qs[i] for i in batch), cbackend, block_words
+                        )
+                if stacked.ndim == 1:
+                    stacked = stacked[None]
+                for j, i in enumerate(batch):
+                    results[i] = stacked[j]
             else:
-                cbackend = backend or ("fused" if _fused_available() else "circuit")
-                stacked = self._dense_eval(
-                    tuple(qs[i] for i in batch), cbackend, block_words
+                batch = []
+            for i, (q, alg) in enumerate(zip(qs, algs)):
+                if i not in results:
+                    tq = _time.perf_counter() if active else 0.0
+                    results[i] = self._run(q, alg, block_words)
+                    if active:
+                        inf = self.last_info
+                        m = (
+                            inf.get("words_touched")
+                            if isinstance(inf, dict) else None
+                        )
+                        _obs.record_drift(
+                            str(alg), plans[i].cost, m or 0,
+                            _time.perf_counter() - tq,
+                        )
+            if _trace.enabled:
+                costs = [p.cost for p in plans if p.cost is not None]
+                info = self.last_info
+                root.set(
+                    backends=sorted(set(map(str, algs))),
+                    predicted_words=sum(costs) if costs else None,
+                    measured_words=(
+                        info.get("words_touched")
+                        if isinstance(info, dict) else None
+                    ),
                 )
-            if stacked.ndim == 1:
-                stacked = stacked[None]
-            for j, i in enumerate(batch):
-                results[i] = stacked[j]
-        else:
-            batch = []
-        for i, (q, alg) in enumerate(zip(qs, algs)):
-            if i not in results:
-                results[i] = self._run(q, alg, block_words)
         return [self._mask(results[i]) for i in range(len(qs))]
 
     def count(self, query, **kw) -> int:
@@ -553,7 +687,10 @@ class BitmapIndex:
 
     def _run(self, q: Query, alg: str, block_words) -> jax.Array:
         try:
-            out, info = run_plan(self._shard_ctx(q, block_words), alg)
+            with _trace.span("dispatch", backend=alg) as sp:
+                out, info = run_plan(self._shard_ctx(q, block_words), alg)
+                if _trace.enabled and isinstance(info, dict):
+                    _annotate_dispatch(sp, info)
         except ValueError as e:
             if "only executes bare Threshold" in str(e):
                 raise ValueError(

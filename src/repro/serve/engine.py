@@ -27,12 +27,30 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro.obs as _obs
 from repro.configs.base import ModelConfig
 from repro.core.bitmaps import from_positions, to_positions_np
 from repro.models import decode_step, forward, init_cache
 from repro.models.model import logits_from_hidden
 from repro.query import And, BitmapIndex, Col, Not, Query
 from repro.stream import StreamingIndex
+
+# Engine-level accounting on the process-wide registry (no-ops until
+# ``repro.obs.enable()``); slot-selection queries themselves report
+# through the query-layer instrumentation.
+_ADMISSIONS = _obs.REGISTRY.counter(
+    "repro_engine_admissions_total", "Request admissions by outcome",
+    ("outcome",),
+)
+_STEPS = _obs.REGISTRY.counter(
+    "repro_engine_decode_steps_total", "Batched decode steps run",
+)
+_TOKENS = _obs.REGISTRY.counter(
+    "repro_engine_tokens_emitted_total", "Tokens emitted across slots",
+)
+_OCCUPIED = _obs.REGISTRY.gauge(
+    "repro_engine_occupied_slots", "Slots holding a live request",
+)
 
 
 @dataclasses.dataclass
@@ -176,6 +194,7 @@ class ServeEngine:
         if sets or clears:
             self._slot_stream.update(sets=sets, clears=clears)
         self._occ_now, self._near_now = occ, near
+        _OCCUPIED.set(len(occ))
 
     def select_slots(self, query: Query) -> list[int]:
         """Slot ids matching a query expression over the criteria columns.
@@ -197,7 +216,9 @@ class ServeEngine:
     def submit(self, req: Request) -> bool:
         free = self.free_slots()
         if not free:
+            _ADMISSIONS.inc(1, outcome="rejected")
             return False
+        _ADMISSIONS.inc(1, outcome="admitted")
         slot = free[0]
         self.requests[slot] = req
         toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
@@ -239,6 +260,8 @@ class ServeEngine:
                 r.done = True
                 self.requests[i] = None  # release slot
         self.step_count += 1
+        _STEPS.inc(1)
+        _TOKENS.inc(len(emitted))
         # every slot change this step -- completions releasing slots and
         # positions crossing the near-limit margin -- lands as ONE batched
         # delta apply on the streaming slot index

@@ -45,12 +45,15 @@ from __future__ import annotations
 
 import threading
 import time
-from collections import Counter, OrderedDict, defaultdict
+from collections import OrderedDict, defaultdict
 from concurrent.futures import Future
 from dataclasses import dataclass, field
 from functools import lru_cache
 
+import repro.obs as _obs
 from repro.core.calibration import get_calibration
+from repro.obs import trace as _trace
+from repro.obs.registry import MetricsRegistry
 from repro.query import plan_memo_info
 from repro.query.expr import (
     And,
@@ -68,6 +71,32 @@ from repro.query.expr import (
 )
 
 __all__ = ["Overloaded", "QueryServer", "shape_bucket"]
+
+
+# Serving lifecycle counter events (one labelled family, not nine names:
+# merges across servers/shards stay a single schema).
+_EVENT_NAMES = (
+    "requests", "served", "cache_hits", "dedup_hits", "shed",
+    "executed", "batches", "invalidations", "errors",
+)
+
+# Mirrors on the process-wide registry: no-ops until ``repro.obs.enable()``.
+# The server also keeps its OWN always-enabled registry (``QueryServer.obs``)
+# so ``info()`` counters and latency percentiles work regardless of the
+# global observability switch.
+_G_EVENTS = _obs.REGISTRY.counter(
+    "repro_serve_events_total", "QueryServer lifecycle events", ("event",),
+)
+_G_BATCH = _obs.REGISTRY.counter(
+    "repro_serve_batch_size_total", "Micro-batch occurrences by exact size",
+    ("size",),
+)
+_G_QWAIT = _obs.REGISTRY.histogram(
+    "repro_serve_queue_wait_seconds", "submit -> micro-batch dispatch wait",
+)
+_G_LAT = _obs.REGISTRY.histogram(
+    "repro_serve_request_latency_seconds", "submit -> result resolution",
+)
 
 
 class Overloaded(RuntimeError):
@@ -117,13 +146,18 @@ def shape_bucket(q: Query) -> tuple:
 
 @dataclass
 class _Pending:
-    """One distinct in-flight query and everyone waiting on it."""
+    """One distinct in-flight query and everyone waiting on it.
+
+    ``futures`` holds ``(future, t_submit)`` pairs so resolution can
+    observe each waiter's end-to-end latency; ``t_submit`` is the first
+    waiter's enqueue time (the queue-wait clock)."""
 
     query: Query  # member-bound expression
     ckey: tuple
     backend: str | None
     cols: frozenset  # support column names (cache version vector domain)
-    futures: list = field(default_factory=list)
+    futures: list = field(default_factory=list)  # [(Future, t_submit), ...]
+    t_submit: float = 0.0
 
 
 class _ResultCache:
@@ -230,11 +264,27 @@ class QueryServer:
         self._inflight: dict = {}  # same keys, currently executing
         self._thread: threading.Thread | None = None
         self._stop = False
-        self._counters = Counter(
-            requests=0, served=0, cache_hits=0, dedup_hits=0, shed=0,
-            executed=0, batches=0, invalidations=0, errors=0,
+        #: the server's own always-enabled metrics registry: ``info()``
+        #: counters and latency percentiles hold whether or not the
+        #: process-wide ``repro.obs`` switch is on; every mutation is
+        #: mirrored onto the global registry (a no-op when disabled)
+        self.obs = MetricsRegistry(enabled=True)
+        self._events = self.obs.counter(
+            "repro_serve_events_total", "QueryServer lifecycle events",
+            ("event",),
         )
-        self._batch_sizes: Counter = Counter()  # batch size -> occurrences
+        self._batch_hist = self.obs.counter(
+            "repro_serve_batch_size_total",
+            "Micro-batch occurrences by exact size", ("size",),
+        )
+        self._queue_wait = self.obs.histogram(
+            "repro_serve_queue_wait_seconds",
+            "submit -> micro-batch dispatch wait",
+        )
+        self._latency = self.obs.histogram(
+            "repro_serve_request_latency_seconds",
+            "submit -> result resolution",
+        )
         if self._streaming:
             self._src.subscribe(self._on_version_bump)
 
@@ -257,7 +307,22 @@ class QueryServer:
         if self._cache is None:
             return
         with self._lock:
-            self._counters["invalidations"] += self._cache.invalidate(names)
+            self._count("invalidations", self._cache.invalidate(names))
+
+    # -- metrics plumbing --------------------------------------------------
+    def _count(self, event: str, n: int = 1) -> None:
+        """One lifecycle event: server registry always, global mirror when
+        observability is enabled."""
+        self._events.inc(n, event=event)
+        _G_EVENTS.inc(n, event=event)
+
+    def _observe_latency(self, seconds: float) -> None:
+        self._latency.observe(seconds)
+        _G_LAT.observe(seconds)
+
+    def _observe_queue_wait(self, seconds: float) -> None:
+        self._queue_wait.observe(seconds)
+        _G_QWAIT.observe(seconds)
 
     # -- client surface ----------------------------------------------------
     def submit(self, query, *, backend: str | None = None) -> Future:
@@ -270,6 +335,7 @@ class QueryServer:
         request is shed with :class:`Overloaded`.
         """
         backend = backend or self.backend
+        t_sub = time.perf_counter()
         try:
             q, ckey, cols = _analyze(query, self._names())
         except TypeError:  # unhashable query: skip the memo
@@ -278,28 +344,30 @@ class QueryServer:
             cols = column_refs(q) or frozenset(self._names())
         fut: Future = Future()
         with self._lock:
-            self._counters["requests"] += 1
+            self._count("requests")
             if self._cache is not None:
                 hit = self._cache.get((ckey, backend, self._vkey(cols, self._versions())))
                 if hit is not None:
-                    self._counters["cache_hits"] += 1
-                    self._counters["served"] += 1
+                    self._count("cache_hits")
+                    self._count("served")
+                    self._observe_latency(time.perf_counter() - t_sub)
                     fut.set_result(hit)
                     return fut
             key = (ckey, backend)
             inflight = self._pending.get(key) or self._inflight.get(key)
             if inflight is not None:
-                self._counters["dedup_hits"] += 1
-                inflight.futures.append(fut)
+                self._count("dedup_hits")
+                inflight.futures.append((fut, t_sub))
                 return fut
             if len(self._pending) >= self.max_pending:
-                self._counters["shed"] += 1
+                self._count("shed")
                 raise Overloaded(
                     f"pending queue full ({self.max_pending} distinct queries "
                     "in flight); retry later"
                 )
             self._pending[key] = _Pending(
-                query=q, ckey=ckey, backend=backend, cols=cols, futures=[fut]
+                query=q, ckey=ckey, backend=backend, cols=cols,
+                futures=[(fut, t_sub)], t_submit=t_sub,
             )
             self._work.notify()
         return fut
@@ -355,22 +423,28 @@ class QueryServer:
         """Retire ``items`` with ``exc`` (pops them from the in-flight map
         first so waiter lists are final when we resolve them)."""
         with self._lock:
-            self._counters["errors"] += len(items)
+            self._count("errors", len(items))
             futures = []
             for p in items:
                 self._inflight.pop((p.ckey, p.backend), None)
-                futures.extend(p.futures)
+                futures.extend(f for f, _t in p.futures)
         for f in futures:
             f.set_exception(exc)
 
     def _dispatch(self, idx, versions, items, backend) -> int:
         t0 = time.perf_counter()
+        for p in items:
+            self._observe_queue_wait(max(0.0, t0 - p.t_submit))
         try:
-            outs = idx.execute_many([p.query for p in items], backend=backend)
-            outs = [
-                o.block_until_ready() if hasattr(o, "block_until_ready") else o
-                for o in outs
-            ]
+            with _trace.span(
+                "serve_batch", batch=len(items),
+                backend=backend if backend is not None else "planner",
+            ):
+                outs = idx.execute_many([p.query for p in items], backend=backend)
+                outs = [
+                    o.block_until_ready() if hasattr(o, "block_until_ready") else o
+                    for o in outs
+                ]
         except Exception as e:  # noqa: BLE001 - one bucket fails as a unit
             self._fail(items, e)
             return 0
@@ -383,9 +457,10 @@ class QueryServer:
         served = 0
         resolved = []
         with self._lock:
-            self._counters["batches"] += 1
-            self._counters["executed"] += len(items)
-            self._batch_sizes[len(items)] += 1
+            self._count("batches")
+            self._count("executed", len(items))
+            self._batch_hist.inc(1, size=len(items))
+            _G_BATCH.inc(1, size=len(items))
             for p, out in zip(items, outs):
                 if self._cache is not None:
                     self._cache.put(
@@ -398,10 +473,12 @@ class QueryServer:
                 self._inflight.pop((p.ckey, p.backend), None)
                 resolved.append((list(p.futures), out))
                 served += len(p.futures)
-                self._counters["served"] += len(p.futures)
+                self._count("served", len(p.futures))
+        t_done = time.perf_counter()
         for futures, out in resolved:
-            for f in futures:
+            for f, t_sub in futures:
                 f.set_result(out)
+                self._observe_latency(max(0.0, t_done - t_sub))
         return served
 
     # -- batcher thread ----------------------------------------------------
@@ -451,13 +528,34 @@ class QueryServer:
     def info(self) -> dict:
         """Serving counters: requests/served/cache_hits/dedup_hits/shed/
         executed/batches/invalidations/errors, the batch-size histogram,
-        cache + pending occupancy, plan-memo counters, and the calibration
-        constants currently steering the planner."""
+        cache + pending occupancy, latency/queue-wait percentiles,
+        plan-memo counters, and the calibration constants currently
+        steering the planner.
+
+        A view over the server's metrics registry (:attr:`obs`): the same
+        numbers export as Prometheus text via ``server.obs``, and mirror
+        onto the process-wide ``repro.obs.REGISTRY`` when enabled."""
         with self._lock:
-            out = dict(self._counters)
+            out = {e: int(self._events.value(event=e)) for e in _EVENT_NAMES}
             out["pending"] = len(self._pending)
             out["cache_entries"] = len(self._cache) if self._cache else 0
-            out["batch_size_hist"] = dict(sorted(self._batch_sizes.items()))
+            out["batch_size_hist"] = dict(sorted(
+                (int(key[0]), int(v))
+                for key, v in self._batch_hist.series().items()
+            ))
+        lat, qw = self._latency.state(), self._queue_wait.state()
+        out["latency"] = {
+            "count": lat.count,
+            "p50_s": lat.quantile(0.5),
+            "p95_s": lat.quantile(0.95),
+            "p99_s": lat.quantile(0.99),
+        }
+        out["queue_wait"] = {
+            "count": qw.count,
+            "p50_s": qw.quantile(0.5),
+            "p95_s": qw.quantile(0.95),
+            "p99_s": qw.quantile(0.99),
+        }
         out["plan_memo"] = plan_memo_info()
         calib = self.calibration
         out["calibration"] = None if calib is None else {

@@ -187,6 +187,7 @@ def run_tiled_circuit(
         INTERPRET,
         circuit_structural_key,
     )
+    from repro.query.execinfo import make_exec_info
 
     if interpret is None:
         interpret = INTERPRET
@@ -234,29 +235,23 @@ def run_tiled_circuit(
     # per-tile constant fill values: the scan engine broadcasts these to
     # words on-device, the merge engine expands them into the host buffer
     base_vals = np.zeros((k, n_sel), dtype=np.uint32)
-    info = {
-        "n_tiles": n_tiles,
-        "selected_tiles": n_sel,
-        "n_outputs": k,
-        "engine": engine,
-        "signatures": 0,
-        "residual_signatures": 0,  # signatures needing a residual kernel
-        "const_tiles": 0,  # tiles where EVERY output folded to a constant
-        "case3_tiles": 0,
-        "dirty_words_gathered": 0,
-        "total_words": int(store.n * nw),
-        "launches": 0,
-        "event_tiles": 0,  # case-3 tiles resolved by event merge
-        "densified_tiles": 0,  # case-3 tiles decoded to dense words
-        "compressed_words_gathered": 0,  # storage words read from containers
-        "decode_words": 0,  # dense-equivalent words the decode prologue staged
-        "words_by_kind": {"dense": 0, "sparse": 0, "run": 0},
-    }
+    # ExecInfo (repro.query.execinfo): the one schema every backend reports
+    # in; see the schema module for per-key semantics and merge rules
+    info = make_exec_info(
+        "tiled_fused",
+        n_tiles=n_tiles,
+        selected_tiles=n_sel,
+        n_outputs=k,
+        engine=engine,
+        total_words=int(store.n * nw),
+    )
 
     def _finish_host(out):
         info["work_fraction"] = info["dirty_words_gathered"] / max(
             1, info["total_words"]
         )
+        # roofline traffic term: gathered input words + written output words
+        info["words_touched"] = info["dirty_words_gathered"] + k * nw
         if restricted:
             return out, info  # host [k, n_sel, tw], caller patches per tile
         result = out.reshape(k, -1)[:, :nw]
@@ -679,6 +674,7 @@ def _run_scan_pass(store, merged, base_vals, info, sel, restricted,
     info["work_fraction"] = info["dirty_words_gathered"] / max(
         1, info["total_words"]
     )
+    info["words_touched"] = info["dirty_words_gathered"] + k * nw
     cache[pkey] = (plan, {**info, "words_by_kind": dict(info["words_by_kind"])})
     while len(cache) > _SCAN_PLAN_CACHE_CAP:
         cache.popitem(last=False)

@@ -38,6 +38,7 @@ import dataclasses
 import numpy as np
 
 from repro.core.bitmaps import cardinality
+from repro.obs import REGISTRY as _OBS
 from repro.query.expr import Col, Query, as_query, bind_members
 from repro.query.index import BitmapIndex, circuit_for
 
@@ -45,6 +46,29 @@ from .delta import DeltaStore, base_tile_batch
 from .overlay import OverlayStore
 
 __all__ = ["CompactionPolicy", "MaterializedView", "StreamingIndex"]
+
+# Streaming-path accounting on the process-wide registry (no-ops until
+# ``repro.obs.enable()``).  Mutation batches, view refresh work and
+# compactions are the three knobs the overlay cost story turns on.
+_MUTATIONS = _OBS.counter(
+    "repro_stream_mutations_total", "Mutation batches applied", ("kind",),
+)
+_MUTATED_POSITIONS = _OBS.counter(
+    "repro_stream_mutated_positions_total", "Individual bit mutations applied",
+)
+_REFRESHES = _OBS.counter(
+    "repro_stream_view_refreshes_total", "Materialized-view tile refreshes",
+)
+_REFRESH_WORDS = _OBS.counter(
+    "repro_stream_view_refresh_words_total",
+    "Words touched refreshing materialized views",
+)
+_COMPACTIONS = _OBS.counter(
+    "repro_stream_compactions_total", "Delta-into-base compactions",
+)
+_COMPACTED_WORDS = _OBS.histogram(
+    "repro_stream_compaction_delta_words", "Delta words folded per compaction",
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -279,6 +303,9 @@ class StreamingIndex:
                              on: np.ndarray) -> None:
         """Route one validated (cols, pos, on) batch to the owning shards
         -- the shared tail of :meth:`update` and WAL replay."""
+        if _OBS.enabled:
+            _MUTATIONS.inc(1, kind="update")
+            _MUTATED_POSITIONS.inc(int(pos.size))
         touched: dict[int, set] = {}
         toffs = self._tile_offsets()
         boffs = self._bit_offsets()
@@ -326,6 +353,9 @@ class StreamingIndex:
             # log only the data-column rows: the view columns' appended
             # bits are recomputed on replay exactly like they were live
             self._wal.append_rows(arr[data_slots])
+        if _OBS.enabled:
+            _MUTATIONS.inc(1, kind="append")
+            _MUTATED_POSITIONS.inc(int(arr.sum()))
         toffs = self._tile_offsets()
         shard = len(self._deltas) - 1
         tiles = self._deltas[shard].append_rows(arr)
@@ -479,6 +509,7 @@ class StreamingIndex:
         # the view must keep meaning what it meant when registered, even
         # after more (view) columns join the schema
         q = bind_members(as_query(query), self._names)
+        _MUTATIONS.inc(1, kind="materialize")
         if self._wal is not None and not self._replaying:
             self._wal.append_materialize(name, q)
         self.refresh()
@@ -608,6 +639,9 @@ class StreamingIndex:
                 delta_card += d.patch_tile(view.slot, int(t), out[li])
             refreshed_tiles.update((t0 + local).tolist())
         view.cardinality += delta_card
+        if _OBS.enabled:
+            _REFRESHES.inc(1)
+            _REFRESH_WORDS.inc(int(words_touched))
         view.last_refresh_info = {
             "tiles_refreshed": int(tiles.size),
             "words_gathered": int(gathered),
@@ -637,6 +671,9 @@ class StreamingIndex:
             self.delta_words, self._base_working_words()
         ):
             return False
+        if _OBS.enabled:
+            _COMPACTIONS.inc(1)
+            _COMPACTED_WORDS.observe(float(self.delta_words))
         if self._sharded:
             from repro.dist.query import ShardedBitmapIndex
 
