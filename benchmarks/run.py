@@ -23,6 +23,11 @@ Prints ``name,value,derived`` CSV lines.  Sections:
               cost, disabled-site cost, drift sample counts, Prometheus
               scrape lint (repro.obs; writes BENCH_obs.json and the
               BENCH_obs_trace.jsonl span-tree artifact)
+  search   -- similarity search + windowed analytics: bitmap candidate
+              generation raced vs the integer-list competitors (MergeOpt /
+              DivideSkip / WHEAP) at the same T, adaptive top-k, window
+              refresh words-touched vs the touched-tiles bound
+              (repro.search; smoke sizes, writes BENCH_search.json)
   roofline -- three-term roofline per dry-run cell (deliverable g; requires
               artifacts/dryrun from ``python -m repro.launch.dryrun``)
 """
@@ -33,7 +38,7 @@ import traceback
 
 
 def main() -> None:
-    sections = sys.argv[1:] or ["table5", "table7", "fig3", "table10", "heatmap", "kernel", "weighted", "query", "stream", "persist", "serve", "obs", "roofline"]
+    sections = sys.argv[1:] or ["table5", "table7", "fig3", "table10", "heatmap", "kernel", "weighted", "query", "stream", "persist", "serve", "obs", "search", "roofline"]
     failures = 0
     for section in sections:
         print(f"# --- {section} ---")
@@ -84,6 +89,10 @@ def main() -> None:
                 rows = mod.run(smoke=True)
             elif section == "obs":
                 from benchmarks import obs_bench as mod
+
+                rows = mod.run(smoke=True)
+            elif section == "search":
+                from benchmarks import search_bench as mod
 
                 rows = mod.run(smoke=True)
             elif section == "roofline":

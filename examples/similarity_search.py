@@ -2,21 +2,27 @@
 
     PYTHONPATH=src python examples/similarity_search.py
 
-Builds a bigram -> record bitmap index over a synthetic corpus of strings,
-then answers approximate-match queries with the Sarawagi-Kirpal threshold
-T = |s| + q - 1 - k*q: every record within edit distance k shares >= T
-q-grams with the query.  Candidates come out as a bitmap; the final
-edit-distance verification runs only on candidates (the paper's screening
-pattern).  Compares the bitmap algorithms against the integer-list
-competitors on the same query.
+Builds a bigram bitmap index over a synthetic corpus with
+``repro.search.build_qgram_index``, then answers approximate-match
+queries through the planner path: the Sarawagi-Kirpal bound over a
+record's DISTINCT bigrams says every record within edit distance k
+shares >= T = n_grams - k*q of the query's grams.  Candidates come out
+as a bitmap; edit-distance verification runs only on candidates (the
+paper's screening pattern), and ``topk`` relaxes T stepwise for
+nearest-neighbour queries.
+
+Crucially, T can be <= 0 (short strings, generous k) -- then the filter
+is VACUOUS and every record is a candidate.  An earlier version of this
+example clamped ``T = max(1, ...)``, silently dropping true matches that
+share zero grams with the query; the vacuous demo at the bottom is the
+regression this file exists to remember.
 """
 import time
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import cardinality, from_positions, threshold, to_positions_np
 from repro.core import listalgos as LA
+from repro.search import build_qgram_index, edit_distance
 
 Q = 2  # bigrams, as Ferro et al.
 rng = np.random.default_rng(0)
@@ -28,56 +34,64 @@ def rand_name():
     return "".join(ALPHA[i] for i in rng.integers(0, 26, n))
 
 
-def qgrams(s):
-    # sentinel padding so #grams = |s| + q - 1 (the paper's T formula assumes it)
-    s = "#" * (Q - 1) + s + "$" * (Q - 1)
-    return {s[i : i + Q] for i in range(len(s) - Q + 1)}
-
-
-def edit_distance(a, b):
-    dp = list(range(len(b) + 1))
-    for i, ca in enumerate(a, 1):
-        prev, dp[0] = dp[0], i
-        for j, cb in enumerate(b, 1):
-            prev, dp[j] = dp[j], min(dp[j] + 1, dp[j - 1] + 1, prev + (ca != cb))
-    return dp[-1]
-
-
 # corpus with planted near-duplicates
 corpus = [rand_name() for _ in range(4000)]
 target = corpus[123]
 corpus.append(target[:-1] + "x")          # distance 1
 corpus.append("q" + target[1:])           # distance 1
+corpus.append("qz")                       # shares ZERO bigrams with "zq"
 R = len(corpus)
 
-# build the bigram bitmap index
-index: dict[str, list[int]] = {}
-for rid, s in enumerate(corpus):
-    for g in qgrams(s):
-        index.setdefault(g, []).append(rid)
-print(f"corpus: {R} records, {len(index)} distinct bigrams")
+idx = build_qgram_index(corpus, q=Q)
+print(f"corpus: {R} records, {len(idx.index.names)} tokenizer columns")
 
 k = 1  # edit-distance budget
-grams = sorted(qgrams(target))
-T = max(1, len(target) + Q - 1 - k * Q)
-lists = [np.asarray(index.get(g, []), dtype=np.int64) for g in grams]
-bm = jnp.stack([from_positions(l, R) for l in lists])
-print(f"query {target!r}: N={len(grams)} bigram bitmaps, threshold T={T}")
+cand = idx.candidates(target, k)
+print(
+    f"query {target!r}: {cand.n_grams} distinct bigrams, threshold T={cand.t}"
+)
 
-threshold(bm, T, algorithm="fused").block_until_ready()  # compile (tabulated per N,T)
+idx.candidates(target, k)  # warm the compiled-circuit cache
 t0 = time.perf_counter()
-cand_bm = threshold(bm, T, algorithm="fused")
-cands = to_positions_np(cand_bm)
+cand = idx.candidates(target, k)
 t_bitmap = time.perf_counter() - t0
-print(f"bitmap threshold  : {len(cands)} candidates in {t_bitmap * 1e3:.1f} ms")
+print(f"bitmap threshold  : {len(cand)} candidates in {t_bitmap * 1e3:.1f} ms")
 
+# the same T-occurrence query over the paper's integer-list competitor
+lists = idx.posting_lists(target)
 t0 = time.perf_counter()
-cands_list = LA.dsk(lists, T, R)
+cands_list = LA.dsk(lists, cand.t, R)
 t_dsk = time.perf_counter() - t0
 print(f"DivideSkip (host) : {len(cands_list)} candidates in {t_dsk * 1e3:.1f} ms")
-assert np.array_equal(cands, cands_list)
+assert np.array_equal(cand.ids, cands_list)
 
-matches = [rid for rid in cands if edit_distance(target, corpus[rid]) <= k]
-print(f"verified matches within distance {k}: {sorted(matches)}")
-assert 123 in matches and R - 2 in matches and R - 1 in matches
+matches = idx.search(target, k)
+print(f"verified matches within distance {k}: {sorted(matches.ids.tolist())}")
+assert {123, R - 3, R - 2} <= set(matches.ids.tolist())
 print("planted near-duplicates found - OK")
+
+# nearest neighbours by adaptive threshold relaxation: starts at the exact
+# T for k_edits=0 and relaxes stepwise, verifying only each step's new band
+top = idx.topk(target, 3)
+print(
+    f"top-3 neighbours: ids {top.ids.tolist()} at distances "
+    f"{top.distances.tolist()} ({top.relaxations} relaxation steps, "
+    f"{top.verified} verifications)"
+)
+assert top.ids.tolist()[0] == 123 and top.distances.tolist() == [0, 1, 1]
+
+# the vacuous-threshold case the old clamp got wrong: a 2-char query with
+# k=3 has T = n_grams - k*q <= 0, so NO record can be excluded -- the
+# planted "qz" (distance 2) shares zero bigrams with "zq" and the clamped
+# filter would silently drop it
+short = "zq"
+vac = idx.candidates(short, k=3)
+print(
+    f"query {short!r} with k=3: T={vac.t} (vacuous={vac.vacuous}) -> "
+    f"{len(vac)} candidates"
+)
+assert vac.vacuous and len(vac) == R, "non-positive T must candidate ALL rows"
+hits = idx.search(short, k=3)
+assert R - 1 in hits.ids.tolist(), "zero-shared-gram match must be found"
+assert all(edit_distance(short, corpus[i]) <= 3 for i in hits.ids.tolist())
+print(f"verified {len(hits.ids)} matches within distance 3 - vacuous case OK")

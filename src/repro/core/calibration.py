@@ -33,6 +33,7 @@ import time
 
 __all__ = [
     "Calibration",
+    "device_signature",
     "get_calibration",
     "set_calibration",
     "clear_calibration",
@@ -60,6 +61,26 @@ _EWMA_ALPHA = 0.2
 # clamp each observed constant to this band around the running value
 _OBS_CLAMP = 8.0
 
+#: device strings exempt from topology-staleness checks: "identity" is the
+#: synthetic uniform calibration (device-independent by construction) and
+#: "unknown" is the blank default a caller fills by observation
+_PORTABLE_DEVICES = ("identity", "unknown")
+
+
+def device_signature() -> str:
+    """The current execution topology: ``<backend>x<device_count>``.
+
+    A constant measured on one topology is meaningless on another (8-device
+    sharded dispatch amortises differently than single-device; TPU words/µs
+    says nothing about CPU), so calibrations are stamped with this
+    signature and reset when it no longer matches -- the EWMA alone never
+    recovers from a swap because :meth:`Calibration.observe` clamps each
+    sample to a band around the dead running value.
+    """
+    import jax
+
+    return f"{jax.default_backend()}x{jax.device_count()}"
+
 
 @dataclasses.dataclass
 class Calibration:
@@ -86,15 +107,44 @@ class Calibration:
             return None
         return self.dispatch_us.get(backend, 0.0) + float(words) * k / 1024.0
 
+    def is_stale(self, signature: str | None = None) -> bool:
+        """True when the constants were recorded on a different topology
+        than the current one (portable devices are never stale)."""
+        if self.device in _PORTABLE_DEVICES:
+            return False
+        return self.device != (signature or device_signature())
+
+    def reset_for_device(self, signature: str | None = None) -> None:
+        """Drop constants recorded on another topology and re-stamp.
+
+        The EWMA cannot decay its way out of a device swap: each observation
+        is clamped to within ``_OBS_CLAMP`` of the running value, so a
+        constant that is 1000x wrong on the new topology keeps steering the
+        planner essentially forever.  A topology change therefore resets to
+        a blank slate; the first observation per backend re-admits at the
+        observed rate, and the planner falls back to the words model until
+        then."""
+        self.device = signature or device_signature()
+        self.us_per_kword.clear()
+        self.dispatch_us.clear()
+        self.samples.clear()
+
     def observe(self, backend: str, words: float | None, seconds: float) -> None:
         """Fold one measured execution back into the constants (EWMA).
 
         ``words`` is the plan's estimate for the execution (``Plan.cost``);
         the dispatch floor is attributed first and the remainder prices the
         per-word rate.  Unknown backends are admitted at the observed rate.
+        A calibration recorded on a different topology is reset first --
+        dead constants must not anchor the clamp band (see
+        :meth:`reset_for_device`).
         """
         if words is None or words <= 0 or seconds <= 0:
             return
+        if self.is_stale():
+            self.reset_for_device()
+            if self is _ACTIVE:
+                _bump_generation()
         us = seconds * 1e6
         disp = self.dispatch_us.get(backend, 0.0)
         k_obs = max(us - disp, us * 0.1) * 1024.0 / float(words)
@@ -145,7 +195,18 @@ _ACTIVE: Calibration | None = None
 _GENERATION = 0  # bumped on install; plan memos key on it
 
 
+def _bump_generation() -> None:
+    global _GENERATION
+    _GENERATION += 1
+
+
 def get_calibration() -> Calibration | None:
+    """The installed calibration, topology-checked: constants recorded on
+    a device signature that no longer matches are reset (and the plan-memo
+    generation bumped) before the planner can price with them."""
+    if _ACTIVE is not None and _ACTIVE.is_stale():
+        _ACTIVE.reset_for_device()
+        _bump_generation()
     return _ACTIVE
 
 
@@ -199,7 +260,7 @@ def measure_calibration(
     bits[: max(1, n // 4), : (n_words * 16)] = False  # some clean territory
     idx = BitmapIndex.from_dense(bits)
     stats = idx.store.member_stats(None)
-    calib = Calibration(device=jax.default_backend())
+    calib = Calibration(device=device_signature())
     for backend in backends:
         t = {"wide_or": 1, "wide_and": n}.get(backend, max(2, n // 2))
         q = Threshold(t)

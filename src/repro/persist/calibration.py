@@ -50,8 +50,14 @@ def save_calibration(calib: Calibration, path) -> Path:
 
 def load_calibration(path, *, allow_mismatch: bool = False) -> Calibration | None:
     """Read persisted constants; None when absent, unreadable, or measured
-    on a different device kind (stale constants are worse than none)."""
+    on a different device topology (stale constants are worse than none).
+
+    Accepts the full topology signature (``cpux8``), the legacy bare
+    backend name (files written before signatures carried device counts),
+    and the portable ``identity`` calibration."""
     import jax
+
+    from repro.core.calibration import device_signature
 
     target = _resolve(path)
     if not target.exists():
@@ -61,8 +67,13 @@ def load_calibration(path, *, allow_mismatch: bool = False) -> Calibration | Non
     except (OSError, ValueError):
         return None
     calib = Calibration.from_obj(obj)
-    if not allow_mismatch and calib.device not in ("identity", jax.default_backend()):
+    accepted = ("identity", jax.default_backend(), device_signature())
+    if not allow_mismatch and calib.device not in accepted:
         return None
+    if calib.device == jax.default_backend():
+        # legacy bare-backend stamp: adopt the full signature so the
+        # topology-staleness check doesn't immediately reset the constants
+        calib.device = device_signature()
     return calib
 
 

@@ -320,13 +320,16 @@ class StreamingIndex:
         if touched:
             self._after_mutation(touched)
 
-    def append_rows(self, bits) -> None:
+    def append_rows(self, bits) -> tuple:
         """Append new row positions (products) to the universe: dense bool
         ``[n_data_columns, k]`` in column-name order (materialized views
         excluded -- their appended bits are computed, not supplied), or a
         ``{name: bits}`` mapping (absent columns default to all-zero).
         Under sharding the appended range extends the LAST shard -- no
-        resharding, no gather."""
+        resharding, no gather.  Returns the appended global row range
+        ``(start, stop)`` so callers (``repro.search`` record appends,
+        windowed event streams) can address the new rows."""
+        start = self.r
         data_slots = [
             i for i, nm in enumerate(self._names) if nm not in self._views
         ]
@@ -336,7 +339,7 @@ class StreamingIndex:
                 k = np.atleast_1d(np.asarray(v)).shape[-1]
                 break
             if k is None:
-                return
+                return (start, start)
             arr = np.zeros((self.n, k), bool)
             for name, row in bits.items():
                 arr[self._data_slot(name)] = np.asarray(row, bool)
@@ -367,6 +370,41 @@ class StreamingIndex:
         self._after_mutation(
             {slot: set(gtiles) for slot in range(self.n)}, appended=gtiles
         )
+        return (start, start + arr.shape[1])
+
+    def add_data_column(self, name: str, packed=None) -> None:
+        """Grow the schema with a new data column (default all-zero).
+
+        Token vocabularies grow as records append (``repro.search``: a new
+        string brings never-seen q-grams), so the column axis must be able
+        to grow without a rebuild, exactly like the row axis.  The delta is
+        compacted first -- column growth lands in the base store, whose
+        ``add_column`` shares every untouched column's storage -- and only
+        the new column is classified.  Refused on a durable index: the WAL
+        format has no schema-growth record, so replay could not reproduce
+        the column (checkpoint-then-recover would silently diverge).
+        """
+        if name in self._slot:
+            raise ValueError(f"column {name!r} already exists")
+        if self._wal is not None:
+            raise RuntimeError(
+                "add_data_column is not supported on a durable index: the "
+                "WAL cannot replay schema growth; checkpoint into a fresh "
+                "index instead"
+            )
+        self.refresh()
+        self.compact(force=True)
+        if packed is None:
+            packed = np.zeros(self._base.n_words, np.uint32)
+        _MUTATIONS.inc(1, kind="add_column")
+        self._base = self._base.add_column(name, packed)
+        self._names = tuple(self._base.names)
+        self._slot = {n: i for i, n in enumerate(self._names)}
+        self._reset_deltas()
+        self._overlay_cache = None
+        self._version += 1
+        self._col_versions[name] = self._version
+        self._notify(frozenset((name,)))
 
     def _after_mutation(self, touched: dict, appended: set | None = None) -> None:
         self._version += 1

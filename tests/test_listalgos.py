@@ -35,6 +35,45 @@ def test_skewed_lists_dsk_mgopt():
         np.testing.assert_array_equal(LA.wmgsk(lists, t, r), expect)
 
 
+@pytest.mark.parametrize("algo", [LA.wheap, LA.wsort, LA.hashcnt, LA.w2cti,
+                                  LA.mgopt, LA.dsk], ids=lambda f: f.__name__)
+def test_differential_fuzz(algo):
+    """Random list families vs the scancount oracle, hammering the edges
+    the similarity-search candidate generator actually produces: t=1
+    (union), t=N (intersection), t>N (constant-empty), empty posting
+    lists mixed in, and the single-list family.  t >= 1 only -- t<=0 is
+    the vacuous case handled ABOVE the list merge, not inside it."""
+    rng = np.random.default_rng(hash(algo.__name__) % 2**32)
+    for trial in range(25):
+        r = int(rng.integers(1, 400))
+        n = int(rng.integers(1, 10))
+        lists = []
+        for _ in range(n):
+            size = int(rng.integers(0, max(r // 2, 1) + 1))
+            lists.append(np.sort(rng.choice(r, size=size, replace=False)))
+        ts = {1, n, n + 1, n + 3, int(rng.integers(1, n + 2))}
+        for t in sorted(ts):
+            expect = LA.scancount_np(lists, t, r)
+            got = np.asarray(algo(lists, t, r))
+            np.testing.assert_array_equal(
+                got, expect,
+                err_msg=f"{algo.__name__} trial={trial} n={n} r={r} t={t}",
+            )
+
+
+@pytest.mark.parametrize("algo", [LA.wheap, LA.wsort, LA.hashcnt, LA.w2cti,
+                                  LA.mgopt, LA.dsk], ids=lambda f: f.__name__)
+def test_single_list_and_all_empty(algo):
+    rng = np.random.default_rng(7)
+    r = 64
+    one = [np.sort(rng.choice(r, size=9, replace=False))]
+    np.testing.assert_array_equal(np.asarray(algo(one, 1, r)), one[0])
+    assert np.asarray(algo(one, 2, r)).size == 0  # t > N
+    empties = [np.array([], dtype=np.int64)] * 3
+    for t in (1, 3, 5):
+        assert np.asarray(algo(empties, t, r)).size == 0
+
+
 def test_matches_bitmap_threshold():
     import jax.numpy as jnp
 

@@ -462,3 +462,73 @@ def test_plan_memo_invalidated_by_calibration_swap(_no_calibration):
     assert fresh.cost_us is not None
     assert idx.explain(q).memo == "hit"
     clear_compiled_cache()
+
+
+def test_topology_swap_resets_stale_constants(_no_calibration):
+    """Constants recorded on another device topology must be dropped, not
+    EWMA-blended: the observe clamp anchors every new sample to within 8x
+    of the dead running value, so a swapped device would be mispriced
+    forever (a 1e9 us/kword constant can never decay to ~1e3)."""
+    from repro.core.calibration import Calibration, device_signature
+
+    dead = Calibration(device="tpux8", us_per_kword={"ssum": 1e9},
+                       samples={"ssum": 500})
+    assert device_signature() != "tpux8" and dead.is_stale()
+    dead.observe("ssum", 1024, 1e-3)  # 1000us for 1k words
+    assert dead.device == device_signature() and not dead.is_stale()
+    # re-admitted at the OBSERVED rate, not clamped around the dead value
+    assert dead.us_per_kword["ssum"] == pytest.approx(1000.0)
+    assert dead.samples["ssum"] == 1
+
+    # portable calibrations are never stale: identity keeps its constants
+    ident = Calibration.identity(("ssum",))
+    assert not ident.is_stale("tpux8") and not ident.is_stale()
+    ident.observe("ssum", 1024, 1e-6)
+    assert ident.samples["ssum"] == 1 and ident.device == "identity"
+
+
+def test_stale_active_calibration_reset_on_read(_no_calibration):
+    """get_calibration() topology-checks the installed constants and bumps
+    the plan-memo generation when it has to reset them -- memoized plans
+    priced with dead constants must not be served."""
+    from repro.core.calibration import (
+        Calibration,
+        calibration_generation,
+        device_signature,
+        get_calibration,
+        set_calibration,
+    )
+
+    stale = Calibration(device="gpux64", us_per_kword={"ssum": 1e9})
+    set_calibration(stale)
+    gen = calibration_generation()
+    active = get_calibration()
+    assert active is stale
+    assert active.device == device_signature() and not active.us_per_kword
+    assert calibration_generation() == gen + 1
+    # subsequent reads are quiet: no further resets or generation bumps
+    assert get_calibration() is stale
+    assert calibration_generation() == gen + 1
+
+
+def test_load_calibration_adopts_legacy_device_stamp(tmp_path, _no_calibration):
+    """Files written before signatures carried device counts stamped the
+    bare backend name; loading must adopt the full signature so the
+    staleness check doesn't immediately wipe the loaded constants."""
+    import jax
+
+    from repro.core.calibration import Calibration, device_signature
+    from repro.persist import load_calibration, save_calibration
+
+    legacy = Calibration(device=jax.default_backend(),
+                         us_per_kword={"ssum": 2.0}, samples={"ssum": 4})
+    save_calibration(legacy, tmp_path)
+    back = load_calibration(tmp_path)
+    assert back is not None
+    assert back.device == device_signature() and not back.is_stale()
+    assert back.us_per_kword == {"ssum": 2.0}
+
+    current = Calibration(device=device_signature(), us_per_kword={"ssum": 1.0})
+    save_calibration(current, tmp_path / "sig")
+    back = load_calibration(tmp_path / "sig")
+    assert back is not None and not back.is_stale()

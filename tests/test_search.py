@@ -1,0 +1,414 @@
+"""repro.search: similarity search + windowed analytics.
+
+The contracts under test:
+
+* the Sarawagi-Kirpal candidate threshold is EXACT, including the vacuous
+  ``T <= 0`` case -- the historical ``max(1, T)`` clamp silently dropped
+  true matches sharing zero q-grams with the query (the headline
+  regression here);
+* ``topk`` returns exactly the brute-force edit-distance top-k, bit-
+  identically on every ``ALGORITHMS`` backend, sharded and unsharded;
+* appends (records AND new vocabulary) never require a rebuild;
+* windowed counts stay correct under append/expiry with tile-granular
+  refresh work, and retention compaction preserves the live state.
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import repro.obs as obs
+from repro.core.threshold import ALGORITHMS
+from repro.query.expr import Col, Threshold
+from repro.search import (
+    MinHashParams,
+    WindowedStream,
+    WindowRetentionPolicy,
+    band_buckets,
+    build_qgram_index,
+    edit_distance,
+    minhash_signature,
+    qgrams,
+    sk_threshold,
+)
+
+RNG = np.random.default_rng(42)
+ALPHA = list("abcdef")
+
+
+def _corpus(n, lo=3, hi=9, seed=3):
+    rng = np.random.default_rng(seed)
+    return ["".join(rng.choice(ALPHA, size=rng.integers(lo, hi))) for _ in range(n)]
+
+
+def _brute_topk(strings, q, k):
+    return sorted((edit_distance(q, s), i) for i, s in enumerate(strings))[:k]
+
+
+# ---------------------------------------------------------------------------
+# Tokenization
+# ---------------------------------------------------------------------------
+
+
+class TestTokenize:
+    def test_qgrams_padding_and_distinctness(self):
+        assert qgrams("ab", 2) == {"#a", "ab", "b$"}
+        # repeats collapse: "aaa" has positions #a,aa,aa,a$ but 3 DISTINCT
+        assert qgrams("aaa", 2) == {"#a", "aa", "a$"}
+        assert qgrams("", 2) == {"#$"}
+        with pytest.raises(ValueError):
+            qgrams("x", 0)
+
+    def test_sk_threshold_is_raw(self):
+        # the bound must come back unclamped: T <= 0 IS the vacuous signal
+        assert sk_threshold(11, 2, 1) == 9
+        assert sk_threshold(3, 2, 2) == -1
+        assert sk_threshold(3, 3, 1) == 0
+
+    def test_minhash_stable_and_shaped(self):
+        p = MinHashParams(n_hashes=8, bands=4, buckets=16)
+        s1 = minhash_signature(qgrams("hello"), p)
+        s2 = minhash_signature(qgrams("hello"), p)
+        assert s1.shape == (8,) and (s1 == s2).all()
+        b = band_buckets(s1, p)
+        assert len(b) == 4 and all(0 <= x < 16 for x in b)
+        # identical token sets share every band; empty set is the sentinel
+        assert band_buckets(minhash_signature(qgrams("hello"), p), p) == b
+        empty = minhash_signature((), p)
+        assert (empty == np.iinfo(np.uint64).max).all()
+        with pytest.raises(ValueError):
+            MinHashParams(n_hashes=7, bands=4)
+
+
+# ---------------------------------------------------------------------------
+# Candidate generation -- the vacuous-threshold regression
+# ---------------------------------------------------------------------------
+
+
+class TestCandidates:
+    def test_vacuous_threshold_candidates_all_rows(self):
+        """THE bug: 'qz' is within distance 2 of 'zq' but shares ZERO
+        bigrams with it.  T = 3 - 3*2 <= 0 means the gram filter excludes
+        nothing; the old max(1, T) clamp dropped the true match."""
+        corpus = _corpus(40) + ["qz"]
+        idx = build_qgram_index(corpus, q=2)
+        q = "zq"
+        assert not (qgrams(q) & qgrams("qz"))  # zero shared grams
+        cand = idx.candidates(q, k=3)
+        assert cand.t <= 0 and cand.vacuous
+        assert len(cand) == len(corpus)  # all rows, no exclusion
+        hits = idx.search(q, k=3)
+        assert len(corpus) - 1 in hits.ids.tolist()
+        # the clamped filter (>= 1 shared gram) provably misses the match
+        clamped = idx.candidates(q, k=0)  # T = n_grams > 0: real filter
+        assert len(corpus) - 1 not in clamped.ids.tolist()
+
+    def test_threshold_exactness_vs_gram_counting(self):
+        corpus = _corpus(60, seed=9)
+        idx = build_qgram_index(corpus, q=2)
+        q, k = corpus[7][:-1] + "x", 1
+        cand = idx.candidates(q, k)
+        grams = qgrams(q)
+        assert cand.t == len(grams) - k * 2
+        want = [
+            i for i, s in enumerate(corpus)
+            if len(grams & qgrams(s)) >= cand.t
+        ]
+        assert cand.ids.tolist() == want
+        # screening is sound: every true match is a candidate
+        for i, s in enumerate(corpus):
+            if edit_distance(q, s) <= k:
+                assert i in want
+
+    def test_more_required_than_present_grams_is_empty(self):
+        idx = build_qgram_index(["aaaa", "bbbb"], q=2)
+        cand = idx.candidates("zxq", k=0)  # no gram exists in the index
+        assert not cand.vacuous and len(cand) == 0
+
+    def test_length_filter_keeps_exactness(self):
+        corpus = _corpus(50, seed=4) + ["abcdef"]
+        idx = build_qgram_index(corpus, q=2)
+        q, k = "abcdxf", 1
+        plain = idx.candidates(q, k)
+        filtered = idx.candidates(q, k, length_filter=True)
+        assert set(filtered.ids.tolist()) <= set(plain.ids.tolist())
+        # no true match lost: |len(r)-len(q)| <= k is necessary
+        for i, s in enumerate(corpus):
+            if edit_distance(q, s) <= k:
+                assert i in filtered.ids.tolist()
+
+    def test_vacuous_with_length_filter_cuts_rows(self):
+        corpus = ["a", "ab", "abcdefgh", "x"]
+        idx = build_qgram_index(corpus, q=2)
+        cand = idx.candidates("ab", k=2, length_filter=True)
+        assert cand.vacuous
+        ids = set(cand.ids.tolist())
+        assert {0, 1, 3} <= ids and 2 not in ids  # |8 - 2| > 2
+
+    def test_minhash_candidates_hit_identical_record(self):
+        corpus = _corpus(30, seed=5) + ["hello"]
+        p = MinHashParams(n_hashes=8, bands=4, buckets=64)
+        idx = build_qgram_index(corpus, q=2, minhash=p)
+        cand = idx.minhash_candidates("hello", min_bands=4)
+        assert len(corpus) - 1 in cand.ids.tolist()
+        with pytest.raises(ValueError):
+            build_qgram_index(corpus, q=2).minhash_candidates("hello")
+
+    def test_posting_lists_match_gram_membership(self):
+        corpus = _corpus(25, seed=6)
+        idx = build_qgram_index(corpus, q=2)
+        q = corpus[3]
+        lists = idx.posting_lists(q)
+        grams = sorted(g for g in qgrams(q))
+        assert len(lists) == len([g for g in grams])
+        for g, lst in zip(grams, lists):
+            want = [i for i, s in enumerate(corpus) if g in qgrams(s)]
+            assert lst.tolist() == want
+
+
+# ---------------------------------------------------------------------------
+# Adaptive top-k: oracle parity on every backend, sharded and unsharded
+# ---------------------------------------------------------------------------
+
+
+class TestTopK:
+    CORPUS = _corpus(36, seed=12) + ["hello", "hellp", "zq"]
+
+    @pytest.mark.parametrize("n_shards", [None, 3], ids=["unsharded", "sharded"])
+    @pytest.mark.parametrize("backend", (None,) + ALGORITHMS,
+                             ids=lambda b: b or "planner")
+    def test_oracle_parity_every_backend(self, backend, n_shards):
+        idx = build_qgram_index(self.CORPUS, q=2, n_shards=n_shards)
+        for q, k in (("hello", 3), ("zq", 5)):
+            tk = idx.topk(q, k, backend=backend)
+            got = list(zip(tk.distances.tolist(), tk.ids.tolist()))
+            assert got == _brute_topk(self.CORPUS, q, k), (q, backend)
+            assert len(tk.ids) == k
+
+    def test_vacuous_topk_regression(self):
+        """Short query, k larger than any non-vacuous band can supply:
+        the loop must fall through to the all-rows band and stay exact."""
+        corpus = _corpus(20, seed=8) + ["qz"]
+        idx = build_qgram_index(corpus, q=2)
+        tk = idx.topk("zq", k=len(corpus))
+        assert tk.vacuous
+        got = list(zip(tk.distances.tolist(), tk.ids.tolist()))
+        assert got == _brute_topk(corpus, "zq", len(corpus))
+
+    def test_relaxation_verifies_only_bands(self):
+        corpus = _corpus(200, seed=13) + ["hello", "hellp"]
+        idx = build_qgram_index(corpus, q=2)
+        tk = idx.topk("hello", 2)
+        assert tk.distances.tolist() == [0, 1]
+        # the whole point of the band loop: nowhere near the full corpus
+        assert tk.verified < len(corpus) // 2
+        assert tk.relaxations >= 1 and not tk.vacuous
+
+    def test_max_edits_bounds_the_loop(self):
+        corpus = _corpus(15, seed=14)
+        idx = build_qgram_index(corpus, q=2)
+        tk = idx.topk("zzzzzzzz", k=10, max_edits=1)
+        assert all(d <= 1 for d in tk.distances.tolist())
+
+    def test_k_validation(self):
+        idx = build_qgram_index(["ab"], q=2)
+        with pytest.raises(ValueError):
+            idx.topk("ab", 0)
+
+
+# ---------------------------------------------------------------------------
+# Incremental appends (rows AND vocabulary)
+# ---------------------------------------------------------------------------
+
+
+class TestAppend:
+    @pytest.mark.parametrize("n_shards", [None, 2], ids=["unsharded", "sharded"])
+    def test_append_with_new_grams(self, n_shards):
+        corpus = _corpus(30, seed=21)
+        idx = build_qgram_index(corpus, q=2, n_shards=n_shards)
+        extra = ["zzzyx", corpus[0]]  # never-seen grams + a duplicate
+        start, stop = idx.append(extra)
+        assert (start, stop) == (30, 32)
+        assert idx.r == 32 and idx.record(30) == "zzzyx"
+        full = corpus + extra
+        m = idx.search("zzzyx", k=1)
+        assert 30 in m.ids.tolist()
+        for q, k in (("zzzyx", 2), (corpus[0], 3)):
+            tk = idx.topk(q, k)
+            got = list(zip(tk.distances.tolist(), tk.ids.tolist()))
+            assert got == _brute_topk(full, q, k)
+
+    def test_empty_append_is_noop(self):
+        idx = build_qgram_index(["abc"], q=2)
+        assert idx.append([]) == (1, 1)
+        assert idx.r == 1
+
+
+# ---------------------------------------------------------------------------
+# Windowed analytics
+# ---------------------------------------------------------------------------
+
+
+class TestWindow:
+    def _brute(self, events, now, window, lo, hi, cols):
+        live = [cs for ts, cs in events if ts > now - window]
+        return sum(1 for cs in live if lo <= len(set(cs) & set(cols)) <= hi)
+
+    def test_counts_track_expiry(self):
+        stores = [f"store:{i}" for i in range(6)]
+        ws = WindowedStream(stores, window=100.0,
+                            policy=WindowRetentionPolicy(auto=False))
+        ws.watch("hot", Threshold(2, over=[Col(s) for s in stores]))
+        rng = np.random.default_rng(31)
+        events, t = [], 0.0
+        for _ in range(40):
+            t += float(rng.uniform(1, 10))
+            cols = list(rng.choice(stores, size=rng.integers(1, 5), replace=False))
+            events.append((t, cols))
+        ws.append(events)
+        live = [(ts, cs) for ts, cs in events if ts > ws.now - 100.0]
+        want = sum(1 for _, cs in live if len(cs) >= 2)
+        assert ws.count("hot") == want
+        # march the clock; the maintained count must track the brute force
+        for now in (t + 20, t + 60, t + 101):
+            ws.advance(now)
+            want = sum(
+                1 for ts, cs in events if ts > now - 100.0 and len(cs) >= 2
+            )
+            assert ws.count("hot") == want, now
+        assert ws.count("hot") == 0 and ws.live_events == 0
+
+    def test_refresh_is_tile_granular(self):
+        """Words touched refreshing the window view are bounded by the
+        TOUCHED tiles (support + output), never the whole universe."""
+        stores = [f"s{i}" for i in range(3)]
+        ws = WindowedStream(stores, window=1e6, tile_words=8,
+                            policy=WindowRetentionPolicy(auto=False))
+        ws.watch("any", Threshold(1, over=[Col(s) for s in stores]))
+        # bulk history makes the universe much larger than one tile
+        ws.append([(float(i), ["s0"]) for i in range(4000)])
+        assert ws.count("any") == 4000
+        ws.append([(4000.0, ["s1", "s2"])])
+        info = ws.refresh_info("any")
+        sup = 1 + len(stores)  # support columns gathered + output written
+        tile_words = ws.stream.tile_words
+        assert info["words_touched"] <= info["tiles_refreshed"] * tile_words * (sup + 1)
+        # the single-event batch touches O(1) tiles, not the universe
+        n_tiles = (ws.total_rows + tile_words * 32 - 1) // (tile_words * 32)
+        assert info["tiles_refreshed"] <= 2 < n_tiles
+
+    def test_retention_retires_dead_rows(self):
+        stores = ["a", "b"]
+        ws = WindowedStream(
+            stores, window=10.0,
+            policy=WindowRetentionPolicy(auto=False, min_dead_rows=1,
+                                         max_dead_ratio=0.0),
+        )
+        ws.watch("either", Threshold(1, over=[Col("a"), Col("b")]))
+        ws.append([(float(i), ["a"] if i % 2 else ["b"]) for i in range(50)])
+        ws.advance(50.0)  # events with ts <= 40 expired
+        live_before = ws.live_events
+        count_before = ws.count("either")
+        rows_before = ws.total_rows
+        assert ws.dead_rows > 0
+        dropped = ws.retire()
+        assert dropped > 0 and ws.total_rows < rows_before
+        assert ws.live_events == live_before
+        assert ws.count("either") == count_before
+        # stream keeps working after the rewrite
+        ws.append([(50.0, ["a", "b"])])
+        assert ws.count("either") == count_before + 1
+
+    def test_auto_retention_policy_fires(self):
+        ws = WindowedStream(
+            ["x"], window=5.0,
+            policy=WindowRetentionPolicy(min_dead_rows=64, max_dead_ratio=0.3),
+        )
+        for i in range(300):
+            ws.append([(float(i), ["x"])])
+        # most rows expired along the way; the policy must have retired some
+        assert ws.dead_rows < 300
+        assert ws.count(Col("x")) == ws.live_events
+
+    def test_decayed_count(self):
+        ws = WindowedStream(["x", "y"], window=1000.0)
+        ws.append([(0.0, ["x"]), (10.0, ["x", "y"]), (20.0, ["y"])])
+        got = ws.decayed_count(Col("x"), half_life=10.0, now=20.0)
+        assert got == pytest.approx(2.0 ** -2 + 2.0 ** -1)
+        assert ws.decayed_count(Col("y"), half_life=10.0, now=20.0) == \
+            pytest.approx(2.0 ** -1 + 1.0)
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            WindowedStream([], window=10)
+        with pytest.raises(ValueError):
+            WindowedStream(["a"], window=0)
+        ws = WindowedStream(["a"], window=10)
+        with pytest.raises(KeyError):
+            ws.append([(0.0, ["nope"])])
+        with pytest.raises(ValueError):
+            ws.append([(5.0, ["a"]), (1.0, ["a"])])
+        ws.append([(5.0, ["a"])])
+        with pytest.raises(ValueError):
+            ws.advance(1.0)
+
+
+# ---------------------------------------------------------------------------
+# Observability wiring
+# ---------------------------------------------------------------------------
+
+
+class TestObs:
+    def test_search_counters_and_spans(self):
+        idx = build_qgram_index(_corpus(20, seed=33) + ["qz"], q=2)
+        obs.reset()
+        obs.enable()
+        try:
+            idx.search("zq", k=3)
+            idx.topk("zq", k=2)
+            snap = obs.REGISTRY.snapshot()
+            assert snap["repro_search_candidates_total"]["samples"]["qgram"] > 0
+            assert snap["repro_search_verifications_total"]["samples"][""] > 0
+            assert snap["repro_search_relaxations_total"]["samples"][""] > 0
+            assert snap["repro_search_vacuous_total"]["samples"][""] >= 2
+            tree = obs.last_trace()
+            assert tree is not None and tree.name == "search_topk"
+            child_names = {c.name for c in tree.children}
+            assert "search_verify" in child_names
+        finally:
+            obs.disable()
+            obs.reset()
+
+    def test_window_counters(self):
+        obs.reset()
+        obs.enable()
+        try:
+            ws = WindowedStream(["a"], window=5.0)
+            ws.append([(0.0, ["a"]), (1.0, ["a"])])
+            ws.advance(10.0)
+            snap = obs.REGISTRY.snapshot()
+            assert snap["repro_search_window_events_total"]["samples"][""] == 2
+            assert snap["repro_search_window_expired_total"]["samples"][""] == 2
+        finally:
+            obs.disable()
+            obs.reset()
+
+
+# ---------------------------------------------------------------------------
+# The example must run clean (no deprecated shim, vacuous demo included)
+# ---------------------------------------------------------------------------
+
+
+def test_example_runs_without_deprecation_warnings():
+    root = Path(__file__).resolve().parents[1]
+    proc = subprocess.run(
+        [sys.executable, "-W", "error::DeprecationWarning",
+         str(root / "examples" / "similarity_search.py")],
+        capture_output=True, text=True, timeout=600,
+        env={**os.environ, "PYTHONPATH": str(root / "src")},
+    )
+    assert proc.returncode == 0, proc.stderr
+    assert "vacuous case OK" in proc.stdout

@@ -420,3 +420,63 @@ def test_delta_store_patch_and_popcount_delta():
     d.clear_bits(1, [7])
     assert d.card_delta(1) == -1
     assert d.delta_words == 2 * 64
+
+
+# ---------------------------------------------------------------------------
+# Schema growth (add_data_column) + append_rows row ranges
+# ---------------------------------------------------------------------------
+
+
+class TestSchemaGrowth:
+    @pytest.mark.parametrize("n_shards", [None, 3])
+    def test_add_data_column_then_mutate(self, n_shards):
+        bits = _bits(4, 2 * SPAN + 100, seed=17)
+        s = _stream(bits, n_shards=n_shards)
+        assert "c9" not in s
+        s.add_data_column("c9")
+        assert "c9" in s and s.count(Col("c9")) == 0
+        # a fresh column participates in every mutation kind
+        rows = [0, SPAN + 5, s.r - 1]
+        s.update(sets={"c9": rows})
+        assert _result(s, Col("c9")).nonzero()[0].tolist() == sorted(rows)
+        oracle = np.concatenate([bits, np.zeros((1, bits.shape[1]), bool)])
+        oracle[4, rows] = True
+        got = _result(s, Threshold(2, over=[Col("c0"), Col("c1"), Col("c9")]))
+        want = _oracle(oracle, Threshold(2, over=[Col("c0"), Col("c1"), Col("c4")]))
+        np.testing.assert_array_equal(got, want)
+
+    def test_add_data_column_with_payload(self):
+        bits = _bits(3, SPAN + 40, seed=18)
+        s = _stream(bits)
+        payload = np.zeros(s.index().n_words, np.uint32)
+        payload[0] = 0b1011
+        s.add_data_column("extra", payload)
+        assert s.count(Col("extra")) == 3
+        assert _result(s, Col("extra")).nonzero()[0].tolist() == [0, 1, 3]
+
+    def test_add_data_column_validation(self):
+        s = _stream(_bits(2, 200, seed=19))
+        with pytest.raises(ValueError):
+            s.add_data_column("c0")  # duplicate
+
+    def test_add_data_column_flushes_pending_appends(self):
+        """Schema growth compacts first: pending appends live in a read-only
+        overlay that cannot grow columns, and must not be lost."""
+        bits = _bits(3, 300, seed=20)
+        s = _stream(bits)
+        s.append_rows({"c0": np.ones(40, bool)})
+        s.add_data_column("late")
+        assert s.r == 340 and s.count(Col("c0")) == int(bits[0].sum()) + 40
+        assert s.count(Col("late")) == 0
+
+    def test_append_rows_returns_row_range(self):
+        bits = _bits(2, 150, seed=21)
+        s = _stream(bits)
+        assert s.append_rows({}) == (150, 150)
+        start, stop = s.append_rows({"c1": np.array([True, False, True])})
+        assert (start, stop) == (150, 153)
+        assert _result(s, Col("c1")).nonzero()[0].tolist() == sorted(
+            np.nonzero(bits[1])[0].tolist() + [150, 152]
+        )
+        start, stop = s.append_rows({"c0": np.ones(5, bool)})
+        assert (start, stop) == (153, 158)
